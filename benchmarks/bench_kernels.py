@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (purely
+a correctness vehicle), so wall-times compare the *jnp fallback paths* the
+CPU uses; the TPU kernels are exercised for shape coverage + allclose.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kmeans import assign_jnp, update_centers
+from repro.kernels import assign_argmin, centroid_update
+
+
+def _bench(fn, *args, iters=5):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(csv):
+    rng = np.random.default_rng(0)
+    for (m, d, k) in [(100_000, 2, 200), (50_000, 64, 512)]:
+        x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+        t = _bench(jax.jit(assign_jnp), x, c)
+        gflops = 2 * m * k * d / t / 1e9
+        csv(f"kernel/assign_jnp/{m}x{d}x{k}", t * 1e6, f"{gflops:.1f}GFLOP/s")
+        idx, _ = assign_jnp(x, c)
+        w = jnp.ones((m,), jnp.float32)
+        t = _bench(jax.jit(lambda xx, ii, ww: update_centers(
+            xx, ww, ii, k, jnp.zeros((k, d)))), x, idx, w)
+        csv(f"kernel/centroid_jnp/{m}x{d}x{k}", t * 1e6,
+            f"{m * k * (d + 1) * 2 / t / 1e9:.1f}GFLOP/s")
+    # pallas interpret correctness spot check at bench shapes
+    x = jnp.asarray(rng.normal(size=(4096, 64)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(256, 64)), jnp.float32)
+    i1, d1 = assign_argmin(x, c)
+    i2, d2 = assign_jnp(x, c)
+    ok = bool(jnp.mean((i1 == i2).astype(jnp.float32)) > 0.99)
+    csv("kernel/assign_pallas_interpret_allclose", 0.0, f"match={ok}")
+    return []
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d: print(f"{n},{us:.1f},{d}"))

@@ -1,0 +1,235 @@
+"""§Perf hillclimbing harness: rerun one (arch x shape) cell's roofline
+parts under a named variant, record hypothesis -> change -> before/after.
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --arch llama3-8b \
+      --shape train_4k --variant bf16_grads
+
+Variants are registered below; each is a (description, builder-kwargs /
+monkeypatch) pair.  Results append to benchmarks/artifacts/perf/<cell>.json.
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+import argparse
+import dataclasses
+import json
+import pathlib
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch import dryrun as dr
+from repro.roofline.analysis import (PartCost, cost_of_compiled, model_flops,
+                                     roofline_terms)
+
+PERF = pathlib.Path(__file__).resolve().parent / "artifacts" / "perf"
+
+
+def measure_train(cfg, shape, mesh, *, n_micro=None, act_model=False,
+                  grad_dtype=None, q_chunk=None, remat=None, act_seq=False):
+    """A/B-differenced roofline terms for a train cell under overrides."""
+    import repro.train.step as step_mod
+    model = dr.build_model(cfg)
+    layers_per_step = model.groups[0].layers_per_step
+    n_super = cfg.n_layers // layers_per_step
+    plan = step_mod.default_plan(cfg, shape, dr._dp_size(mesh))
+    overrides = {}
+    if grad_dtype:
+        overrides["grad_dtype"] = grad_dtype
+    if q_chunk:
+        overrides["q_chunk"] = q_chunk
+    if remat is not None:
+        overrides["remat"] = remat
+    if overrides:
+        plan = dataclasses.replace(plan, **overrides)
+    nm = n_micro or plan.n_micro
+
+    orig_default = step_mod.default_plan
+
+    def patched(cfg_, shape_, dp):
+        p = orig_default(cfg_, shape_, dp)
+        return dataclasses.replace(p, **overrides) if overrides else p
+
+    step_mod.default_plan = patched
+    dr.default_plan = patched
+    try:
+        micro_shape = dataclasses.replace(
+            shape, global_batch=max(shape.global_batch // nm,
+                                    dr._dp_size(mesh)))
+        cfg_a = dr._variant(cfg, 1, layers_per_step)
+        cfg_b = dr._variant(cfg, 2, layers_per_step)
+        if act_seq:
+            # sequence-parallel residual stream: patch the act spec builder
+            from jax.sharding import PartitionSpec as P
+            orig_btp = dr.build_train_program
+
+            def build_sp(cfg_, shape_, mesh_, **kw):
+                kw.pop("act_model", None)
+                fn, args, plan = orig_btp(cfg_, shape_, mesh_, **kw,
+                                          act_model=False)
+                return fn, args, plan
+            # monkeypatch act spec inside the builder via step module
+            import repro.train.step as _sm
+            orig_mlf = _sm.make_loss_fn
+
+            def mlf(model, cfg_, shape_, plan, act_spec, unroll=False):
+                return orig_mlf(model, cfg_, shape_, plan,
+                                P("data", "model", None), unroll=unroll)
+            _sm.make_loss_fn = mlf
+            dr.make_loss_fn = mlf
+        with jax.set_mesh(mesh):
+            fa, aa, _ = dr.build_train_program(
+                cfg_a, micro_shape, mesh, n_micro=1, grad_only=True,
+                unroll=True, act_model=act_model)
+            ca, _ = dr.lower_compile(fa, aa)
+            A = cost_of_compiled(ca)
+            del ca, fa
+            fb, ab, _ = dr.build_train_program(
+                cfg_b, micro_shape, mesh, n_micro=1, grad_only=True,
+                unroll=True, act_model=act_model)
+            cb, _ = dr.lower_compile(fb, ab)
+            B = cost_of_compiled(cb)
+            del cb, fb
+            fo, ao = dr.build_opt_program(cfg, shape, mesh)
+            co, _ = dr.lower_compile(fo, ao)
+            OPT = cost_of_compiled(co)
+            del co, fo
+    finally:
+        step_mod.default_plan = orig_default
+        dr.default_plan = orig_default
+    blk = B - A
+    stem = A - blk
+    total = (stem + blk.scaled(n_super)).scaled(nm) + OPT
+    return total
+
+
+def measure_decode(cfg, shape, mesh, *, window=None, compression=None,
+                   full_cache=False):
+    sh = shape
+    if window or compression:
+        sh = dataclasses.replace(
+            shape,
+            cluster_window=window or shape.cluster_window,
+            cluster_compression=compression or shape.cluster_compression)
+    if full_cache:
+        # comparison point: what the paper's clustered-KV replaces
+        sh = dataclasses.replace(sh, cluster_compression=0)
+    model = dr.build_model(cfg)
+    layers_per_step = model.groups[0].layers_per_step
+    n_super = cfg.n_layers // layers_per_step
+    cfg_a = dr._variant(cfg, 1, layers_per_step)
+    cfg_b = dr._variant(cfg, 2, layers_per_step)
+    with jax.set_mesh(mesh):
+        fa, aa = dr.build_decode_program(cfg_a, sh, mesh, unroll=True)[:2]
+        ca, _ = dr.lower_compile(fa, aa)
+        A = cost_of_compiled(ca)
+        del ca, fa
+        fb, ab = dr.build_decode_program(cfg_b, sh, mesh, unroll=True)[:2]
+        cb, _ = dr.lower_compile(fb, ab)
+        B = cost_of_compiled(cb)
+        del cb, fb
+    blk = B - A
+    stem = A - blk
+    return stem + blk.scaled(n_super)
+
+
+def record(arch, shape_name, variant, hypothesis, total: PartCost):
+    PERF.mkdir(parents=True, exist_ok=True)
+    f = PERF / f"{arch}__{shape_name}.json"
+    hist = json.loads(f.read_text()) if f.exists() else []
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_chips = 256
+    terms = roofline_terms(total)
+    mf = model_flops(cfg, shape, shape.kind) / mesh_chips
+    dom = max(terms, key=terms.get)
+    entry = {
+        "variant": variant,
+        "hypothesis": hypothesis,
+        "terms": terms,
+        "dominant": dom,
+        "useful_flop_ratio": mf / max(total.flops, 1.0),
+        "roofline_fraction": (mf / 197e12) / max(terms[dom], 1e-30),
+        "coll_by_op": total.coll_by_op,
+    }
+    hist.append(entry)
+    f.write_text(json.dumps(hist, indent=1))
+    return entry
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--grad-dtype", default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--act-model", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--window", type=int, default=None)
+    ap.add_argument("--compression", type=int, default=None)
+    ap.add_argument("--full-cache", action="store_true")
+    ap.add_argument("--moe-ep-data", action="store_true",
+                    help="experts sharded over 'data', ffn hidden over "
+                         "'model' (kills the per-micro ZeRO gather of "
+                         "expert weights)")
+    ap.add_argument("--act-seq", action="store_true",
+                    help="sequence-parallel residual stream (S over 'model')")
+    ap.add_argument("--zero2", action="store_true",
+                    help="replicate block weights over 'data' (ZeRO-2: "
+                         "only grads+optimizer stay sharded) — removes the "
+                         "per-micro weight all-gather")
+    args = ap.parse_args()
+
+    import repro.train.sharding as shmod
+    from repro.models import lm as lmmod
+    from jax.sharding import PartitionSpec as P
+
+    if args.moe_ep_data:
+        new_rules = []
+        for pat, spec in shmod.RULES:
+            if pat == r"moe/we[13]$":
+                spec = P(None, "data", None, "model")
+            elif pat == r"moe/we2$":
+                spec = P(None, "data", "model", None)
+            new_rules.append((pat, spec))
+        shmod.RULES = tuple(new_rules)
+        lmmod.EXPERT_SPEC_OVERRIDE = P(None, "data", None, "model")
+
+    if args.zero2:
+        orig_ps = shmod.param_specs
+
+        def zero2_param_specs(params_like, mesh_):
+            specs = orig_ps(params_like, mesh_)
+
+            def strip_data(s):
+                parts = [None if a == "data" else
+                         (tuple(x for x in a if x != "data") or None
+                          if isinstance(a, tuple) else a) for a in s]
+                return P(*parts)
+
+            return jax.tree.map(strip_data, specs,
+                                is_leaf=lambda x: isinstance(x, P))
+
+        shmod.param_specs = zero2_param_specs
+        dr.param_specs = zero2_param_specs
+
+    cfg = get_config(args.arch)
+    shape = SHAPES[args.shape]
+    mesh = make_production_mesh()
+    if shape.kind == "train":
+        total = measure_train(cfg, shape, mesh, n_micro=args.n_micro,
+                              act_model=args.act_model,
+                              grad_dtype=args.grad_dtype,
+                              q_chunk=args.q_chunk,
+                              remat=(False if args.no_remat else None),
+                              act_seq=args.act_seq)
+    else:
+        total = measure_decode(cfg, shape, mesh, window=args.window,
+                               compression=args.compression,
+                               full_cache=args.full_cache)
+    e = record(args.arch, args.shape, args.variant, args.hypothesis, total)
+    print(json.dumps(e, indent=1))

@@ -1,0 +1,60 @@
+"""Format the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--markdown]
+"""
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh="single"):
+    cells = []
+    for f in sorted(ART.glob(f"*__{mesh}.json")):
+        rec = json.loads(f.read_text())
+        cells.append(rec)
+    return cells
+
+
+def fmt_row(rec):
+    if "skipped" in rec:
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                f"skipped | {rec['skipped']} |")
+    r = rec.get("roofline")
+    if not r:
+        return (f"| {rec['arch']} | {rec['shape']} | — | — | — | — | "
+                f"compile-only | mem={rec['memory']['peak_estimate_bytes']/1e9:.1f}GB |")
+    dom = rec["dominant"].replace("_s", "")
+    note = []
+    if rec.get("act_sharding") == "model":
+        note.append("act-shard")
+    if rec.get("cache_kind") == "clustered":
+        note.append(f"clustered-KV")
+    return (f"| {rec['arch']} | {rec['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{rec['useful_flop_ratio']:.2f} | {dom} "
+            f"({rec['roofline_fraction']*100:.1f}%) | "
+            f"{','.join(note) or '—'} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    cells = load_cells(args.mesh)
+    print("| arch | shape | compute_s | memory_s | collective_s | "
+          "useful_flops | dominant (roofline frac) | notes |")
+    print("|---|---|---|---|---|---|---|---|")
+    for rec in cells:
+        print(fmt_row(rec))
+    ok = sum(1 for r in cells if "skipped" not in r
+             and (r.get("memory", {}).get("fits_16GB")
+                  or r.get("memory", {}).get("fits_16GB_adj")))
+    print(f"\n{len(cells)} cells; {ok} compiled+fit "
+          f"(raw or CPU-upconvert-adjusted; see EXPERIMENTS §Dry-run).")
+
+
+if __name__ == "__main__":
+    main()

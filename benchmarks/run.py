@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table + framework benches.
+
+  PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+
+Prints ``name,us_per_call,derived`` CSV lines.  Roofline numbers come from
+the dry-run artifacts (benchmarks/artifacts/dryrun/) via
+``python -m benchmarks.roofline_report``.
+"""
+import argparse
+import sys
+import time
+
+
+def _csv(name, us, derived):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+MODULES = [
+    ("table1_accuracy", "benchmarks.bench_accuracy"),
+    ("table2_scaling", "benchmarks.bench_scaling"),
+    ("table3_compression", "benchmarks.bench_compression"),
+    ("cluster_attn", "benchmarks.bench_cluster_attn"),
+    ("kernels", "benchmarks.bench_kernels"),
+    ("grad_compress", "benchmarks.bench_grad_compress"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of bench keys to run")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    import importlib
+    t00 = time.time()
+    for key, modname in MODULES:
+        if only and key not in only and modname.split(".")[-1] not in only:
+            continue
+        t0 = time.time()
+        print(f"# === {key} ({modname}) ===", flush=True)
+        mod = importlib.import_module(modname)
+        try:
+            mod.run(_csv)
+        except Exception as e:  # keep the harness going; report the failure
+            _csv(f"{key}/ERROR", 0.0, repr(e)[:120])
+        print(f"# {key} done in {time.time() - t0:.1f}s", flush=True)
+    print(f"# total {time.time() - t00:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,33 @@
+"""Quickstart: the paper's parallel sampling-based clustering in 30 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import relative_error, sampled_kmeans, standard_kmeans
+from repro.data.synthetic import blobs
+
+
+def main():
+    pts, labels, _ = blobs(20_000, n_clusters=40, dim=2, seed=0)
+    x = jnp.asarray(pts)
+
+    full = standard_kmeans(x, 40, iters=25, key=jax.random.PRNGKey(0))
+    print(f"standard k-means        sse={float(full.sse):10.2f}")
+
+    for scheme in ("equal", "unequal"):
+        res = sampled_kmeans(
+            x, 40,
+            scheme=scheme,        # Algorithm 1 or Algorithm 2
+            n_sub=16,             # subclusters (CUDA blocks in the paper)
+            compression=5,        # paper's c: each N-point subcluster
+                                  # is summarised by N/5 local centers
+            key=jax.random.PRNGKey(0))
+        rel = relative_error(float(res.sse), float(full.sse))
+        print(f"sampled ({scheme:7s})     sse={float(res.sse):10.2f} "
+              f"rel_err={rel:+.2%} local_centers={res.local_centers.shape[0]}")
+
+
+if __name__ == "__main__":
+    main()

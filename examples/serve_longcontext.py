@@ -1,0 +1,101 @@
+"""Long-context serving with the paper's clustered-KV cache.
+
+Builds a model, prefills a long prompt, compresses the KV cache with the
+paper's pipeline (contiguous equal-sized subclusters + per-chunk k-means),
+then decodes with [centroids ‖ exact window] attention and compares the
+generations + logit agreement against full-cache decode.
+
+  PYTHONPATH=src python examples/serve_longcontext.py --seq 512 --compression 8
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--compression", type=int, default=8)
+    ap.add_argument("--window", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.configs import ShapeConfig, get_config
+    from repro.models.attention import compress_kv_cache
+    from repro.models.registry import build_model
+
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    S = args.seq
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+
+    # ---- prefill into a full cache ----------------------------------------
+    shape_full = ShapeConfig("f", S + args.gen, 1, "decode")
+    caches = model.init_caches(1, shape_full, "full")
+    dec = jax.jit(lambda p, c, t, pos, kind: model.decode_step(
+        p, c, t, pos, ctx_extra={"cache_kind": kind}), static_argnames="kind")
+    logits = None
+    for t in range(S):
+        logits, caches = dec(params, caches, toks[:, t:t + 1],
+                             jnp.asarray(t, jnp.int32), "full")
+    print(f"prefilled {S} tokens (full cache "
+          f"{sum(x.nbytes for x in jax.tree.leaves(caches)) / 1e6:.1f} MB)")
+
+    # ---- compress with the paper pipeline ---------------------------------
+    shape_cl = ShapeConfig("c", S + args.gen, 1, "decode",
+                           cluster_compression=args.compression,
+                           cluster_window=args.window)
+    cl = model.init_caches(1, shape_cl, "clustered")
+    kcs, vcs, cnts = [], [], []
+    for l in range(cfg.n_layers):
+        kc, vc, cnt = compress_kv_cache(
+            caches["blocks"]["k"][l][:, :, :S],
+            caches["blocks"]["v"][l][:, :, :S],
+            chunk=max(4 * args.compression, 32),
+            compression=args.compression)
+        pad = cl["blocks"]["kc"].shape[3] - kc.shape[2]
+        kcs.append(jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        vcs.append(jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0))))
+        cnts.append(jnp.pad(cnt, ((0, 0), (0, 0), (0, pad))))
+    cl["blocks"] = dict(cl["blocks"], kc=jnp.stack(kcs), vc=jnp.stack(vcs),
+                        counts=jnp.stack(cnts))
+    csize = sum(x.nbytes for x in jax.tree.leaves(cl)) / 1e6
+    print(f"clustered cache: {csize:.1f} MB "
+          f"({args.compression}x compression + {args.window} exact window)")
+
+    # ---- decode both ways --------------------------------------------------
+    # teacher-forced comparison: feed the SAME (full-cache greedy) tokens
+    # to both caches and compare logits — on an untrained random model the
+    # logit gaps are tiny, so token-level agreement is not informative, but
+    # the logit correlation shows the attention approximation quality.
+    outs = {}
+    corr = []
+    lg_full, cur_full = logits, dict(caches)
+    lg_cl, cur_cl = logits, dict(cl)
+    pos = S
+    forced = jnp.argmax(lg_full[:, -1], -1)[:, None].astype(jnp.int32)
+    full_toks, cl_toks = [], []
+    for t in range(args.gen):
+        full_toks.append(int(forced[0, 0]))
+        cl_toks.append(int(jnp.argmax(lg_cl[:, -1], -1)[0]))
+        lg_full, cur_full = dec(params, cur_full, forced,
+                                jnp.asarray(pos, jnp.int32), "full")
+        lg_cl, cur_cl = dec(params, cur_cl, forced,
+                            jnp.asarray(pos, jnp.int32), "clustered")
+        a = np.asarray(lg_full, np.float32).ravel()
+        b = np.asarray(lg_cl, np.float32).ravel()
+        corr.append(float(np.corrcoef(a, b)[0, 1]))
+        forced = jnp.argmax(lg_full[:, -1], -1)[:, None].astype(jnp.int32)
+        pos += 1
+    match = sum(a == b for a, b in zip(full_toks, cl_toks))
+    print(f"full      : {full_toks}")
+    print(f"clustered : {cl_toks}")
+    print(f"teacher-forced argmax agreement: {match}/{args.gen}; "
+          f"mean logit corr: {np.mean(corr):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""The paper's own workload as a config: the synthetic 500k-point / 1000-
+cluster clustering job (500 points per cluster, 2-D), compression sweep
+c in {5, 10, 15, 20}, 64 subclusters — used by examples/cluster_500k.py and
+benchmarks/bench_scaling.py."""
+PAPER_WORKLOADS = {
+    "iris": dict(n=150, dim=4, k=3, n_sub=6, compression=6),
+    "seeds": dict(n=210, dim=7, k=3, n_sub=6, compression=6),
+    "synthetic_100k": dict(n=100_000, dim=2, k=200, n_sub=64, compression=5),
+    "synthetic_250k": dict(n=250_000, dim=2, k=500, n_sub=64, compression=5),
+    "synthetic_500k": dict(n=500_000, dim=2, k=1000, n_sub=64, compression=5),
+}
+COMPRESSION_SWEEP = (5, 10, 15, 20)

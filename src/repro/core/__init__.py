@@ -1,0 +1,31 @@
+"""Core library: the paper's parallel sampling-based clustering in JAX.
+
+Public API:
+  kmeans, KMeansResult            — weighted Lloyd's algorithm
+  equal_partition, unequal_partition, feature_scale — the two subclustering schemes
+  sampled_kmeans, standard_kmeans — the paper's two-level method + baseline
+  make_distributed_sampled_kmeans — pod-scale shard_map version
+  sse, relative_error, clustering_accuracy — metrics
+"""
+from .kmeans import (KMeansResult, assign_jnp, kmeans, kmeans_lloyd_step,
+                     kmeans_pp_init, landmark_init, pairwise_sqdist,
+                     random_init, update_centers)
+from .metrics import clustering_accuracy, relative_error, sse
+from .pipeline import (SampledClusteringResult, local_stage, sampled_kmeans,
+                       standard_kmeans)
+from .subcluster import (Partition, equal_partition, feature_scale,
+                         gather_partitions, unequal_landmarks,
+                         unequal_partition, unscale)
+from .distributed import (DistributedClusteringResult,
+                          make_distributed_sampled_kmeans)
+
+__all__ = [
+    "KMeansResult", "kmeans", "kmeans_lloyd_step", "assign_jnp",
+    "kmeans_pp_init", "landmark_init", "random_init", "pairwise_sqdist",
+    "update_centers", "Partition", "equal_partition", "unequal_partition",
+    "feature_scale", "unscale", "gather_partitions", "unequal_landmarks",
+    "SampledClusteringResult", "sampled_kmeans", "standard_kmeans",
+    "local_stage", "DistributedClusteringResult",
+    "make_distributed_sampled_kmeans", "sse", "relative_error",
+    "clustering_accuracy",
+]

@@ -1,0 +1,197 @@
+"""Lloyd's k-means in pure JAX.
+
+This is the work-horse the paper runs (a) inside every subcluster and (b) on
+the gathered local centers.  Everything is static-shape / jit / vmap friendly:
+
+  * points may carry *weights* (0 = padded/masked point) so capacity-padded
+    partitions from :mod:`repro.core.subcluster` cluster correctly;
+  * the assignment step is pluggable (``assign_fn``) so the Pallas kernel in
+    :mod:`repro.kernels` can replace the pure-jnp path on TPU;
+  * empty clusters keep their previous center (standard Lloyd fix-up).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class KMeansResult(NamedTuple):
+    centers: Array      # (k, d) final centroids
+    assignment: Array   # (m,) int32 cluster id per point
+    sse: Array          # () weighted sum of squared distances
+    counts: Array       # (k,) weighted member count per cluster
+    n_iter: Array       # () number of Lloyd iterations executed
+
+
+def pairwise_sqdist(x: Array, c: Array) -> Array:
+    """(m, d) x (k, d) -> (m, k) squared euclidean distances.
+
+    Uses the expansion ||x - c||^2 = ||x||^2 + ||c||^2 - 2 x.c so the inner
+    product hits the MXU; clamped at zero against fp cancellation.
+    """
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=-1)
+    xc = x @ c.T
+    return jnp.maximum(x2 + c2[None, :] - 2.0 * xc, 0.0)
+
+
+def assign_jnp(x: Array, c: Array) -> tuple[Array, Array]:
+    """Reference assignment step: nearest center id + its squared distance."""
+    d = pairwise_sqdist(x, c)
+    idx = jnp.argmin(d, axis=-1).astype(jnp.int32)
+    mind = jnp.take_along_axis(d, idx[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return idx, mind
+
+
+AssignFn = Callable[[Array, Array], tuple[Array, Array]]
+
+
+def update_centers(
+    x: Array, weights: Array, idx: Array, k: int, old_centers: Array
+) -> tuple[Array, Array]:
+    """Weighted centroid update via one-hot matmul (TPU-friendly scatter)."""
+    onehot = jax.nn.one_hot(idx, k, dtype=x.dtype) * weights[:, None]
+    counts = onehot.sum(axis=0)
+    sums = onehot.T @ x
+    new = sums / jnp.maximum(counts, 1e-12)[:, None]
+    keep_old = (counts <= 0.0)[:, None]
+    return jnp.where(keep_old, old_centers, new), counts
+
+
+# ---------------------------------------------------------------------------
+# Initialisation schemes
+# ---------------------------------------------------------------------------
+
+def random_init(x: Array, weights: Array, k: int, key: Array) -> Array:
+    """Sample k points with probability proportional to their weight."""
+    m = x.shape[0]
+    logits = jnp.where(weights > 0, 0.0, -jnp.inf)
+    ids = jax.random.categorical(key, logits, shape=(k,))
+    return x[ids]
+
+
+def landmark_init(x: Array, weights: Array, k: int, key: Array | None = None) -> Array:
+    """The paper's Algorithm-2 landmark construction used as a k-means init:
+    k evenly spaced points on the segment [per-attribute min, per-attribute max].
+
+    Masked points are pushed out of the min/max with +/-inf sentinels.
+    """
+    del key
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    valid = (weights > 0)[:, None]
+    lo = jnp.min(jnp.where(valid, x, big), axis=0)
+    hi = jnp.max(jnp.where(valid, x, -big), axis=0)
+    t = jnp.linspace(0.0, 1.0, k, dtype=x.dtype)[:, None]
+    return lo[None, :] + t * (hi - lo)[None, :]
+
+
+def kmeans_pp_init(
+    x: Array, weights: Array, k: int, key: Array,
+    assign_fn: AssignFn = assign_jnp,
+) -> Array:
+    """k-means++ (D^2 weighting), incremental min-distance bookkeeping."""
+    del assign_fn  # incremental form below is cheaper than full assignment
+    m = x.shape[0]
+    key0, key_loop = jax.random.split(key)
+    first = jax.random.categorical(key0, jnp.where(weights > 0, 0.0, -jnp.inf))
+    centers0 = jnp.zeros((k,) + x.shape[1:], x.dtype).at[0].set(x[first])
+    d0 = jnp.sum((x - x[first]) ** 2, axis=-1)
+
+    def body(i, carry):
+        centers, min_d = carry
+        kk = jax.random.fold_in(key_loop, i)
+        p = min_d * weights
+        logits = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-30)), -jnp.inf)
+        # All-zero guard (all points coincide with chosen centers): uniform.
+        logits = jnp.where(jnp.all(~jnp.isfinite(logits)),
+                           jnp.where(weights > 0, 0.0, -jnp.inf), logits)
+        nxt = jax.random.categorical(kk, logits)
+        c = x[nxt]
+        centers = centers.at[i].set(c)
+        min_d = jnp.minimum(min_d, jnp.sum((x - c) ** 2, axis=-1))
+        return centers, min_d
+
+    centers, _ = jax.lax.fori_loop(1, k, body, (centers0, d0))
+    return centers
+
+
+_INITS = {
+    "random": random_init,
+    "landmark": landmark_init,
+    "kmeans++": kmeans_pp_init,
+}
+
+
+# ---------------------------------------------------------------------------
+# Lloyd's algorithm
+# ---------------------------------------------------------------------------
+
+def kmeans(
+    x: Array,
+    k: int,
+    *,
+    weights: Optional[Array] = None,
+    iters: int = 25,
+    key: Optional[Array] = None,
+    init: str | Array = "kmeans++",
+    assign_fn: AssignFn = assign_jnp,
+    restarts: int = 1,
+) -> KMeansResult:
+    """Weighted Lloyd's k-means with a fixed iteration budget.
+
+    A fixed ``iters`` (rather than convergence tests) keeps the computation a
+    static-trip-count ``fori_loop``: vmap-able across subclusters, shard_map
+    friendly, and — at pod scale — a straggler-mitigation device in itself
+    (every subcluster costs the same, no data-dependent tail).
+    """
+    m = x.shape[0]
+    if weights is None:
+        weights = jnp.ones((m,), x.dtype)
+    weights = weights.astype(x.dtype)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+
+    def one_run(kk):
+        if isinstance(init, str):
+            centers = _INITS[init](x, weights, k, kk)
+        else:
+            centers = init
+
+        def body(_, centers):
+            idx, _ = assign_fn(x, centers)
+            new_centers, _ = update_centers(x, weights, idx, k, centers)
+            return new_centers
+
+        centers = jax.lax.fori_loop(0, iters, body, centers)
+        idx, mind = assign_fn(x, centers)
+        sse = jnp.sum(mind * weights)
+        return centers, idx, sse
+
+    if restarts <= 1 or not isinstance(init, str):
+        centers, idx, sse = one_run(key)
+    else:
+        # multi-seed restart: rerun Lloyd from independent inits, keep the
+        # lowest-SSE solution (vmap'd so the restarts batch on device)
+        keys = jax.random.split(key, restarts)
+        centers_r, idx_r, sse_r = jax.vmap(one_run)(keys)
+        best = jnp.argmin(sse_r)
+        centers = jnp.take(centers_r, best, axis=0)
+        idx = jnp.take(idx_r, best, axis=0)
+        sse = jnp.take(sse_r, best, axis=0)
+
+    _, counts = update_centers(x, weights, idx, k, centers)
+    return KMeansResult(centers, idx, sse, counts, jnp.asarray(iters))
+
+
+def kmeans_lloyd_step(
+    x: Array, centers: Array, weights: Array, assign_fn: AssignFn = assign_jnp
+) -> tuple[Array, Array]:
+    """One exposed Lloyd iteration (used by the roofline cost parts and the
+    distributed merge loop)."""
+    idx, _ = assign_fn(x, centers)
+    return update_centers(x, weights, idx, centers.shape[0], centers)

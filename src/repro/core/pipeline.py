@@ -1,0 +1,128 @@
+"""The paper's end-to-end method: partition -> local k-means -> merge k-means.
+
+``sampled_kmeans`` is the single-device reference (host semantics of the
+paper); :mod:`repro.core.distributed` wraps it in shard_map for pod scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kmeans import AssignFn, KMeansResult, assign_jnp, kmeans
+from .metrics import sse as sse_fn
+from .subcluster import (Partition, equal_partition, feature_scale,
+                         gather_partitions, unequal_partition, unscale)
+
+Array = jax.Array
+
+
+class SampledClusteringResult(NamedTuple):
+    centers: Array          # (k, d) final centers, in the *input* space
+    sse: Array              # () SSE of the input points vs final centers
+    local_centers: Array    # (P * k_local, d) the sampled representatives
+    local_weights: Array    # (P * k_local,) member counts (0 = dead slot)
+    n_dropped: Array        # () capacity overflow (Algorithm 2 only)
+
+
+def local_stage(
+    parts: Array,            # (P, cap, d)
+    part_w: Array,           # (P, cap)
+    k_local: int,
+    *,
+    iters: int,
+    key: Array,
+    init: str = "kmeans++",
+    assign_fn: AssignFn = assign_jnp,
+) -> KMeansResult:
+    """vmap'd per-partition k-means — the paper's "device part".  On the CUDA
+    original each subcluster ran on one thread block; here each is one lane of
+    a vmap that shard_map spreads across the mesh."""
+    n_parts = parts.shape[0]
+    keys = jax.random.split(key, n_parts)
+    return jax.vmap(
+        lambda p, w, kk: kmeans(
+            p, k_local, weights=w, iters=iters, key=kk, init=init,
+            assign_fn=assign_fn)
+    )(parts, part_w, keys)
+
+
+def sampled_kmeans(
+    x: Array,
+    k: int,
+    *,
+    scheme: str = "equal",
+    n_sub: int = 8,
+    compression: int = 5,
+    local_iters: int = 10,
+    global_iters: int = 25,
+    key: Optional[Array] = None,
+    init: str = "kmeans++",
+    weighted_merge: bool = False,
+    capacity_factor: float = 2.0,
+    scale: bool = True,
+    assign_fn: AssignFn = assign_jnp,
+    restarts: int = 4,
+) -> SampledClusteringResult:
+    """Two-level sampled clustering (the paper's full method).
+
+    ``compression`` is the paper's `c`: every partition of N points is
+    summarised by ``N // c`` local centers.  ``weighted_merge=True`` is a
+    beyond-paper refinement: the merge k-means weights each local center by
+    its member count (the paper merges unweighted).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    key_local, key_global = jax.random.split(key)
+
+    xs, params = feature_scale(x) if scale else (x, None)
+
+    if scheme == "equal":
+        part: Partition = equal_partition(xs, n_sub)
+    elif scheme == "unequal":
+        part = unequal_partition(xs, n_sub, capacity_factor=capacity_factor)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+
+    parts, part_w = gather_partitions(xs, part)
+    cap = parts.shape[1]
+    k_local = max(1, cap // compression)
+
+    local = local_stage(parts, part_w, k_local, iters=local_iters,
+                        key=key_local, init=init, assign_fn=assign_fn)
+
+    d = x.shape[-1]
+    local_centers = local.centers.reshape(n_sub * k_local, d)
+    local_counts = local.counts.reshape(n_sub * k_local)
+    merge_w = local_counts if weighted_merge else (local_counts > 0).astype(x.dtype)
+
+    merged = kmeans(local_centers, k, weights=merge_w, iters=global_iters,
+                    key=key_global, init=init, assign_fn=assign_fn,
+                    restarts=restarts)
+
+    centers = merged.centers
+    if scale:
+        centers = unscale(centers, params)
+        local_centers = unscale(local_centers, params)
+    total_sse = sse_fn(x, centers)
+    return SampledClusteringResult(centers, total_sse, local_centers,
+                                   local_counts, part.n_dropped)
+
+
+def standard_kmeans(
+    x: Array, k: int, *, iters: int = 25, key: Optional[Array] = None,
+    init: str = "kmeans++", scale: bool = True, assign_fn: AssignFn = assign_jnp,
+    restarts: int = 4,
+) -> SampledClusteringResult:
+    """The baseline the paper compares against (plain Lloyd on all points),
+    wrapped to return the same result type."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    xs, params = feature_scale(x) if scale else (x, None)
+    res = kmeans(xs, k, iters=iters, key=key, init=init, assign_fn=assign_fn,
+                 restarts=restarts)
+    centers = unscale(res.centers, params) if scale else res.centers
+    return SampledClusteringResult(
+        centers, sse_fn(x, centers), centers, res.counts,
+        jnp.asarray(0, jnp.int32))

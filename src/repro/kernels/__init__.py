@@ -1,0 +1,30 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+  assign.py    — k-means assignment (tiled distance + running argmin)
+  centroid.py  — weighted centroid update (one-hot MXU segment-sum)
+  cluster_attn.py — decode attention over clustered KV centroids
+  ops.py       — jit'd public wrappers (padding, dtype plumbing)
+  ref.py       — pure-jnp oracles
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+on CPU with ``interpret=True``; ``default_interpret()`` flips automatically.
+"""
+from __future__ import annotations
+
+import os
+
+
+def default_interpret() -> bool:
+    """interpret=True everywhere except a real TPU backend."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    import jax
+    return jax.default_backend() != "tpu"
+
+
+from .ops import (assign_argmin, centroid_update, cluster_attn_decode,
+                  pallas_assign_fn)  # noqa: E402
+
+__all__ = ["default_interpret", "assign_argmin", "centroid_update",
+           "cluster_attn_decode", "pallas_assign_fn"]

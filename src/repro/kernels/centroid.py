@@ -1,0 +1,75 @@
+"""Pallas TPU kernel for the weighted centroid update (segment-sum).
+
+TPU has no efficient scatter; the idiomatic replacement is a one-hot matmul:
+``sums = onehot(idx)^T @ x`` hits the MXU and the (K, d) accumulator lives in
+VMEM across the sequential grid walk over M tiles — the analogue of the CUDA
+kernel accumulating per-cluster sums in shared memory, then atomics to HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _centroid_kernel(x_ref, idx_ref, w_ref, sums_ref, counts_ref, *, k: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (bm, d)
+    idx = idx_ref[...]                            # (bm, 1) int32
+    w = w_ref[...].astype(jnp.float32)            # (bm, 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], k), 1)
+    onehot = jnp.where(cols == idx, 1.0, 0.0) * w            # (bm, k)
+    sums_ref[...] += jax.lax.dot_general(
+        onehot, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (k, d)
+    counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).T  # (k, 1)
+
+
+def centroid_update_pallas(
+    x: jax.Array,
+    idx: jax.Array,
+    w: jax.Array,
+    k: int,
+    *,
+    block_m: int = 512,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Weighted per-cluster sums and counts.
+
+    (M, d) points, (M,) int32 assignment, (M,) weights -> ((K, d), (K,)).
+    M must be a multiple of block_m (ops.py pads with w=0 rows).
+    """
+    from . import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
+    m, d = x.shape
+    assert m % block_m == 0, (m, block_m)
+    grid = (m // block_m,)
+
+    sums, counts = pl.pallas_call(
+        functools.partial(_centroid_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, d), jnp.float32),
+            jax.ShapeDtypeStruct((k, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, idx.reshape(m, 1), w.reshape(m, 1))
+    return sums, counts[:, 0]

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels: shape padding, dtype
+plumbing, and the ``assign_fn`` adapter that drops the kernels into
+:func:`repro.core.kmeans.kmeans`."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .assign import assign_argmin_pallas
+from .centroid import centroid_update_pallas
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def assign_argmin(x, c, *, block_m: int = 256, block_k: int = 256,
+                  interpret: bool | None = None):
+    """Nearest-center assignment for arbitrary (M, d), (K, d)."""
+    m, d = x.shape
+    k = c.shape[0]
+    bm = min(block_m, _pad_to(m, 8))
+    mp = _pad_to(m, bm)
+    dp = _pad_to(d, 128)
+    xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+    cp = jnp.pad(c, ((0, 0), (0, dp - d)))
+    idx, dist = assign_argmin_pallas(xp, cp, block_m=bm,
+                                     block_k=min(block_k, _pad_to(k, 8)),
+                                     interpret=interpret)
+    return idx[:m], dist[:m]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_m", "interpret"))
+def centroid_update(x, idx, w, k: int, *, block_m: int = 512,
+                    interpret: bool | None = None):
+    """Weighted per-cluster sums/counts for arbitrary M."""
+    m, d = x.shape
+    bm = min(block_m, _pad_to(m, 8))
+    mp = _pad_to(m, bm)
+    dp = _pad_to(d, 128)
+    xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+    idxp = jnp.pad(idx, (0, mp - m))
+    wp = jnp.pad(w, (0, mp - m))  # zero weight => padded rows contribute nothing
+    sums, counts = centroid_update_pallas(xp, idxp, wp, k, block_m=bm,
+                                          interpret=interpret)
+    return sums[:, :d], counts
+
+
+def pallas_assign_fn(x, c):
+    """Drop-in ``assign_fn`` for :func:`repro.core.kmeans.kmeans`."""
+    return assign_argmin(x, c)
+
+
+def cluster_attn_decode(q, kc, vc, counts, scale, *, interpret: bool | None = None):
+    """Decode attention over clustered KV (see kernels/cluster_attn.py)."""
+    from .cluster_attn import cluster_attn_decode_pallas
+    return cluster_attn_decode_pallas(q, kc, vc, counts, scale,
+                                      interpret=interpret)

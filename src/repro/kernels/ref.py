@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract the
+shape/dtype sweep tests assert against)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assign_argmin_ref(x: jax.Array, c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    x = x.astype(jnp.float32)
+    c = c.astype(jnp.float32)
+    d2 = (jnp.sum(x * x, -1, keepdims=True)
+          + jnp.sum(c * c, -1)[None, :]
+          - 2.0 * (x @ c.T))
+    d2 = jnp.maximum(d2, 0.0)
+    idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+    mind = jnp.take_along_axis(d2, idx[:, None], axis=-1)[:, 0]
+    return idx, mind
+
+
+def centroid_update_ref(
+    x: jax.Array, idx: jax.Array, w: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    x = x.astype(jnp.float32)
+    onehot = jax.nn.one_hot(idx, k, dtype=jnp.float32) * w.astype(jnp.float32)[:, None]
+    return onehot.T @ x, onehot.sum(axis=0)
+
+
+def cluster_attn_decode_ref(
+    q: jax.Array,        # (h, dh)
+    kc: jax.Array,       # (hkv, n, dh) centroid keys
+    vc: jax.Array,       # (hkv, n, dh) centroid values
+    counts: jax.Array,   # (hkv, n) member counts (0 = dead centroid)
+    scale: float,
+) -> jax.Array:
+    """Decode attention over clustered KV: logit bias log(count) approximates
+    sum_{i in cluster j} exp(q.k_i) ~= count_j * exp(q.kbar_j)."""
+    h = q.shape[0]
+    hkv = kc.shape[0]
+    g = h // hkv
+    qg = q.reshape(hkv, g, -1).astype(jnp.float32)
+    logits = jnp.einsum("hgd,hnd->hgn", qg, kc.astype(jnp.float32)) * scale
+    bias = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1e-9)), -jnp.inf)
+    logits = logits + bias[:, None, :]
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("hgn,hnd->hgd", p, vc.astype(jnp.float32))
+    return out.reshape(h, -1)

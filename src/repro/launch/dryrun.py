@@ -1,0 +1,403 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell against ShapeDtypeStruct stand-ins (no allocation), record
+memory_analysis / cost_analysis / parsed collective bytes, and the A/B
+superblock-differencing parts the roofline table is assembled from.
+
+Resumable: one JSON per cell in benchmarks/artifacts/dryrun/; existing files
+are skipped unless --force.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+      --shape train_4k --mesh single,multi
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
+                           get_config, shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models.registry import build_model, cache_kind, input_specs
+from repro.optim import get_optimizer
+from repro.roofline.analysis import (PartCost, cost_of_compiled,
+                                     f32_upconvert_bytes, model_flops,
+                                     roofline_terms)
+from repro.train.sharding import (batch_specs, grad_specs, opt_state_specs,
+                                  param_specs, batch_axis)
+from repro.train.step import (TrainPlan, default_plan, make_loss_fn,
+                              make_prefill_step, make_serve_step)
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts" / "dryrun"
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def _dp_size(mesh):
+    dp = batch_axis(mesh)
+    n = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        n *= mesh.shape[a]
+    return n
+
+
+def _variant(cfg: ArchConfig, k: int, layers_per_step: int) -> ArchConfig:
+    upd = {"n_layers": k * layers_per_step}
+    if cfg.encoder_layers:
+        upd["encoder_layers"] = k
+    return dataclasses.replace(cfg, **upd)
+
+
+def _mem_fields(compiled):
+    ma = compiled.memory_analysis()
+    f = {k: getattr(ma, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes")}
+    f["peak_estimate_bytes"] = (f["argument_size_in_bytes"]
+                                + f["temp_size_in_bytes"]
+                                + f["output_size_in_bytes"]
+                                - f["alias_size_in_bytes"])
+    f["fits_16GB"] = bool(f["peak_estimate_bytes"] <= HBM_PER_CHIP)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# per-kind program builders: return (jitted, example_args) ready to .lower()
+# ---------------------------------------------------------------------------
+
+def build_train_program(cfg, shape, mesh, *, n_micro=None, grad_only=False,
+                        unroll=False, act_model=False):
+    from repro.train.step import make_train_step
+    model = build_model(cfg)
+    plan = default_plan(cfg, shape, _dp_size(mesh))
+    if n_micro is not None:
+        plan = dataclasses.replace(plan, n_micro=n_micro)
+    dp = batch_axis(mesh)
+    # act_model: shard the residual stream's d over "model" at block
+    # boundaries — shrinks the per-layer saved-carry stack 16x (needed to
+    # fit the MoE giants; costs one all-gather per block, recorded in the
+    # artifact so the roofline shows the trade).
+    act_spec = P(dp, None, "model") if act_model else P(dp, None, None)
+
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    b_specs = batch_specs(batch_sds, mesh)
+
+    g_specs = grad_specs(params_sds, mesh)
+    if grad_only:
+        loss_fn = make_loss_fn(model, cfg, shape, plan, act_spec,
+                               unroll=unroll)
+        fn = jax.jit(
+            lambda params, mb: jax.value_and_grad(loss_fn)(params, mb),
+            in_shardings=(_ns(mesh, p_specs), _ns(mesh, b_specs)),
+            out_shardings=(None, _ns(mesh, g_specs)))
+        return fn, (params_sds, batch_sds), plan
+
+    optimizer = get_optimizer(
+        plan.optimizer, master_weights=(plan.optimizer == "adamw"
+                                        and cfg.param_count() < 3e10))
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    o_specs = opt_state_specs(opt_sds, p_specs, mesh)
+    state_sds = {"params": params_sds, "opt": opt_sds,
+                 "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    state_specs = {"params": p_specs, "opt": o_specs, "step": P()}
+    step_fn = make_train_step(model, optimizer, cfg, shape, plan,
+                              act_spec=act_spec,
+                              grad_specs=_ns(mesh, g_specs))
+    fn = jax.jit(step_fn,
+                 in_shardings=(_ns(mesh, state_specs), _ns(mesh, b_specs)),
+                 out_shardings=(_ns(mesh, state_specs), None),
+                 donate_argnums=(0,))
+    return fn, (state_sds, batch_sds), plan
+
+
+def build_opt_program(cfg, shape, mesh):
+    model = build_model(cfg)
+    plan = default_plan(cfg, shape, _dp_size(mesh))
+    optimizer = get_optimizer(
+        plan.optimizer, master_weights=(plan.optimizer == "adamw"
+                                        and cfg.param_count() < 3e10))
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, mesh)
+    opt_sds = jax.eval_shape(optimizer.init, params_sds)
+    o_specs = opt_state_specs(opt_sds, p_specs, mesh)
+    grads_sds = jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params_sds)
+    g_specs = grad_specs(params_sds, mesh)
+
+    def opt_only(params, opt, grads):
+        return optimizer.update(grads, opt, params)
+
+    fn = jax.jit(opt_only,
+                 in_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs),
+                               _ns(mesh, g_specs)),
+                 out_shardings=(_ns(mesh, p_specs), _ns(mesh, o_specs), None),
+                 donate_argnums=(0, 1))
+    return fn, (params_sds, opt_sds, grads_sds)
+
+
+def build_prefill_program(cfg, shape, mesh, unroll=False, act_model=False):
+    model = build_model(cfg)
+    dp = batch_axis(mesh)
+    act_spec = P(dp, None, "model") if act_model else P(dp, None, None)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, mesh)
+    batch_sds = input_specs(cfg, shape)
+    b_specs = batch_specs(batch_sds, mesh)
+    step = make_prefill_step(model, cfg, shape, act_spec=act_spec,
+                             q_chunk=1024, unroll=unroll)
+    fn = jax.jit(step, in_shardings=(_ns(mesh, p_specs), _ns(mesh, b_specs)))
+    return fn, (params_sds, batch_sds)
+
+
+def build_decode_program(cfg, shape, mesh, unroll=False):
+    from repro.train.sharding import cache_specs, filter_divisible
+    model = build_model(cfg)
+    kind = cache_kind(cfg, shape)
+    B = shape.global_batch
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = param_specs(params_sds, mesh)
+    # decode has no embed gradients and no grad-accum loop, so the table can
+    # shard d over "model" (saves ~2 GB/chip on the 200k-vocab archs)
+    if "embed" in p_specs:
+        p_specs = dict(p_specs, embed=filter_divisible(
+            P(None, "model"), params_sds["embed"].shape, mesh))
+    caches_sds = jax.eval_shape(lambda: model.init_caches(B, shape, kind))
+    c_specs = cache_specs(caches_sds, mesh, B)
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    dp = batch_axis(mesh)
+    tok_spec = P(dp, None) if B > 1 and B % _dp_size(mesh) == 0 else P(None, None)
+    step = make_serve_step(model, cfg, shape, kind, unroll=unroll)
+    fn = jax.jit(step,
+                 in_shardings=(_ns(mesh, p_specs), _ns(mesh, c_specs),
+                               NamedSharding(mesh, tok_spec),
+                               NamedSharding(mesh, P())),
+                 out_shardings=(None, _ns(mesh, c_specs)),
+                 donate_argnums=(1,))
+    return fn, (params_sds, caches_sds, tok_sds, pos_sds), kind
+
+
+# ---------------------------------------------------------------------------
+# cell runner
+# ---------------------------------------------------------------------------
+
+def lower_compile(fn, args):
+    t0 = time.time()
+    lowered = fn.lower(*args)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    return compiled, {"lower_s": round(t1 - t0, 2),
+                      "compile_s": round(t2 - t1, 2)}
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str, *,
+             with_ab: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi"))
+    model = build_model(cfg)
+    layers_per_step = (model.groups[0].layers_per_step
+                       if hasattr(model, "groups") else 1)
+    n_super = cfg.n_layers // layers_per_step
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                 "kind": shape.kind, "n_super": n_super,
+                 "layers_per_step": layers_per_step,
+                 "params": cfg.param_count(),
+                 "active_params": cfg.active_param_count(),
+                 "chips": int(mesh.devices.size)}
+
+    with jax.set_mesh(mesh):
+        # ---- full-program compile: THE dry-run gate + memory analysis ----
+        def _full(act_model):
+            if shape.kind == "train":
+                fn, args, plan = build_train_program(cfg, shape, mesh,
+                                                     act_model=act_model)
+                rec["plan"] = dataclasses.asdict(plan)
+            elif shape.kind == "prefill":
+                fn, args = build_prefill_program(cfg, shape, mesh,
+                                                 act_model=act_model)
+            else:
+                fn, args, kind = build_decode_program(cfg, shape, mesh)
+                rec["cache_kind"] = kind
+            return lower_compile(fn, args)
+
+        act_model = False
+        compiled = None
+        try:
+            compiled, times = _full(act_model)
+            mem = _mem_fields(compiled)
+        except Exception:
+            if shape.kind not in ("train", "prefill"):
+                raise
+        if (compiled is None or not mem["fits_16GB"]) \
+                and shape.kind in ("train", "prefill"):
+            # fallback: d-sharded block-boundary activations (16x smaller
+            # saved-carry stack; also dodges a GSPMD reshard crash)
+            del compiled
+            act_model = True
+            compiled, times = _full(act_model)
+            mem = _mem_fields(compiled)
+        rec["act_sharding"] = "model" if act_model else "replicated"
+        rec["times"] = times
+        hlo_text = compiled.as_text()
+        # discount the CPU-only f32 upconverts of bf16 weight/cache shards
+        # (the TPU target consumes bf16 natively — see roofline/analysis.py)
+        psds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        pairs = [(psds, param_specs(psds, mesh))]
+        if shape.kind == "train" and rec.get("plan", {}).get(
+                "grad_dtype") == "bfloat16":
+            # bf16 grad accumulators are cast to f32 inside the optimizer —
+            # an elementwise convert the TPU fuses but the CPU materializes;
+            # count the same shard shapes a second time.
+            from repro.train.sharding import grad_specs as _gs
+            gsds = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, jnp.bfloat16), psds)
+            pairs.append((gsds, _gs(psds, mesh)))
+        if shape.kind == "decode":
+            kind_ = cache_kind(cfg, shape)
+            csds = jax.eval_shape(
+                lambda: model.init_caches(shape.global_batch, shape, kind_))
+            from repro.train.sharding import cache_specs
+            pairs.append((csds, cache_specs(csds, mesh, shape.global_batch)))
+        up = f32_upconvert_bytes(hlo_text, pairs, mesh)
+        mem["cpu_f32_upconvert_bytes"] = up
+        mem["peak_adj_bytes"] = mem["peak_estimate_bytes"] - up
+        mem["fits_16GB_adj"] = bool(mem["peak_adj_bytes"] <= HBM_PER_CHIP)
+        rec["memory"] = mem
+        full_cost = cost_of_compiled(compiled)
+        rec["full_program_cost"] = dataclasses.asdict(full_cost)
+        del compiled
+
+        # ---- A/B differencing parts for the roofline -----------------
+        if with_ab:
+            cfg_a = _variant(cfg, 1, layers_per_step)
+            cfg_b = _variant(cfg, 2, layers_per_step)
+            if shape.kind == "train":
+                n_micro = rec["plan"]["n_micro"]
+                micro_shape = dataclasses.replace(
+                    shape, global_batch=max(shape.global_batch // n_micro,
+                                            _dp_size(mesh)))
+                fa, aa, _ = build_train_program(cfg_a, micro_shape, mesh,
+                                                n_micro=1, grad_only=True,
+                                                unroll=True,
+                                                act_model=act_model)
+                fb, ab, _ = build_train_program(cfg_b, micro_shape, mesh,
+                                                n_micro=1, grad_only=True,
+                                                unroll=True,
+                                                act_model=act_model)
+                ca, _ = lower_compile(fa, aa)
+                cb, _ = lower_compile(fb, ab)
+                A, B = cost_of_compiled(ca), cost_of_compiled(cb)
+                del ca, cb
+                blk = B - A
+                stem = A - blk
+                fo, ao = build_opt_program(cfg, shape, mesh)
+                co, _ = lower_compile(fo, ao)
+                OPT = cost_of_compiled(co)
+                del co
+                total = (stem + blk.scaled(n_super)).scaled(n_micro) + OPT
+                rec["parts"] = {"stem": dataclasses.asdict(stem),
+                                "block": dataclasses.asdict(blk),
+                                "opt": dataclasses.asdict(OPT),
+                                "n_micro": n_micro}
+            else:
+                builder = (build_prefill_program if shape.kind == "prefill"
+                           else build_decode_program)
+                kw = ({"act_model": act_model}
+                      if shape.kind == "prefill" else {})
+                fa, aa = builder(cfg_a, shape, mesh, unroll=True, **kw)[:2]
+                fb, ab = builder(cfg_b, shape, mesh, unroll=True, **kw)[:2]
+                ca, _ = lower_compile(fa, aa)
+                cb, _ = lower_compile(fb, ab)
+                A, B = cost_of_compiled(ca), cost_of_compiled(cb)
+                del ca, cb
+                blk = B - A
+                stem = A - blk
+                total = stem + blk.scaled(n_super)
+                rec["parts"] = {"stem": dataclasses.asdict(stem),
+                                "block": dataclasses.asdict(blk)}
+            rec["total_cost"] = dataclasses.asdict(total)
+            terms = roofline_terms(total)
+            rec["roofline"] = terms
+            mf = model_flops(cfg, shape, shape.kind)
+            chips = mesh.devices.size
+            rec["model_flops_global"] = mf
+            rec["model_flops_per_chip"] = mf / chips
+            rec["useful_flop_ratio"] = (mf / chips) / max(total.flops, 1.0)
+            dom = max(terms, key=terms.get)
+            rec["dominant"] = dom
+            rec["roofline_fraction"] = (
+                (mf / chips / 197e12) / max(terms[dom], 1e-30))
+    return rec
+
+
+def cell_path(arch, shape_name, mesh_name) -> pathlib.Path:
+    return ART / f"{arch}__{shape_name}__{mesh_name}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single,multi")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-ab", action="store_true")
+    args = ap.parse_args()
+
+    ART.mkdir(parents=True, exist_ok=True)
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = args.mesh.split(",")
+
+    for arch in archs:
+        cfg = get_config(arch)
+        for sn in shapes:
+            ok, note = shape_applicable(cfg, SHAPES[sn])
+            for mn in meshes:
+                out = cell_path(arch, sn, mn)
+                if out.exists() and not args.force:
+                    print(f"skip (exists): {out.name}")
+                    continue
+                if not ok:
+                    out.write_text(json.dumps(
+                        {"arch": arch, "shape": sn, "mesh": mn,
+                         "skipped": note}, indent=1))
+                    print(f"SKIP {arch} {sn} {mn}: {note}")
+                    continue
+                print(f"=== {arch} x {sn} x {mn} ===", flush=True)
+                t0 = time.time()
+                try:
+                    rec = run_cell(arch, sn, mn,
+                                   with_ab=(not args.no_ab and mn == "single"))
+                    rec["wall_s"] = round(time.time() - t0, 1)
+                    out.write_text(json.dumps(rec, indent=1))
+                    print(f"    ok in {rec['wall_s']}s "
+                          f"mem={rec['memory']['peak_estimate_bytes']/1e9:.2f}GB "
+                          f"fits={rec['memory']['fits_16GB']}", flush=True)
+                except Exception as e:  # record failures for triage
+                    tb = traceback.format_exc()
+                    out.with_suffix(".err").write_text(tb)
+                    print(f"    FAIL {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+A *function*, not a module-level constant — importing this module never
+touches jax device state (jax locks the device count on first init, and
+smoke tests must see 1 CPU device, not 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 = 256 chips/pod ("data","model"); 2 pods add a leading "pod"
+    axis used only for data parallelism (gradient all-reduce over DCN)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over however many (host) devices exist — tests/examples."""
+    axes = ("data", "model")
+    return jax.make_mesh(
+        (n_data, n_model), axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,48 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b \
+      --steps 100 --reduced --ckpt-dir /tmp/ck
+
+On real hardware drop --reduced and point JAX at the TPU slice; the same
+partition rules drive any mesh built by launch/mesh.py (this container has
+one CPU device, so full-size runs are only *lowered* via launch/dryrun.py).
+"""
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-sized)")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--n-micro", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--data-mesh", type=int, default=1)
+    ap.add_argument("--model-mesh", type=int, default=1)
+    args = ap.parse_args()
+
+    from repro.configs import ShapeConfig, get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.step import TrainPlan
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    mesh = make_host_mesh(args.data_mesh, args.model_mesh)
+    plan = TrainPlan(n_micro=args.n_micro, q_chunk=min(2048, args.seq))
+    tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir, log_every=10)
+    trainer = Trainer(cfg, shape, mesh, tc, plan=plan)
+    state, hist = trainer.run()
+    print(f"done: loss {hist[0]:.4f} -> {hist[-1]:.4f} "
+          f"({len(hist)} steps this run)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""GQA attention: training/prefill (chunked, memory-bounded), decode with a
+full KV cache, sliding-window decode with a ring buffer, and the paper's
+clustered-KV decode (centroid cache from sampled clustering).
+
+The training path unrolls a *python* loop over query chunks instead of
+lax.scan: the HLO then contains every chunk (cost_analysis stays exact) while
+XLA's buffer reuse keeps live memory to one (chunk, S) score block.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dot, rope_tables
+
+Array = jax.Array
+NEG = -1.0e30
+
+
+class AttnDims(NamedTuple):
+    n_heads: int
+    n_kv: int
+    dh: int
+
+
+def init_attn(key, d: int, dims: AttnDims, dtype) -> dict:
+    h, kv, dh = dims
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    from .layers import ninit
+    return {
+        "wq": ninit(ks[0], (d, h * dh), s, dtype),
+        "wk": ninit(ks[1], (d, kv * dh), s, dtype),
+        "wv": ninit(ks[2], (d, kv * dh), s, dtype),
+        "wo": ninit(ks[3], (h * dh, d), (h * dh) ** -0.5, dtype),
+    }
+
+
+def _qkv(p, x, dims: AttnDims, cos, sin, use_rope=True):
+    B = x.shape[0]
+    S = x.shape[1]
+    h, kv, dh = dims
+    q = dot(x, p["wq"]).reshape(B, S, h, dh)
+    k = dot(x, p["wk"]).reshape(B, S, kv, dh)
+    v = dot(x, p["wv"]).reshape(B, S, kv, dh)
+    if use_rope:
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Training / prefill: chunked full (or sliding-window) attention
+# ---------------------------------------------------------------------------
+
+def attention(p, x, dims: AttnDims, ctx, *, window: int = 0,
+              causal: bool = True, kv_override=None, use_rope=True) -> Array:
+    """x: (B, S, d) -> (B, S, d).  ``kv_override=(k, v)`` implements cross
+    attention (whisper decoder); ``window>0`` = sliding-window mask."""
+    B, S, _ = x.shape
+    h, kv, dh = dims
+    g = h // kv
+    scale = dh ** -0.5
+    cos, sin = ctx["rope"]
+    q, k, v = _qkv(p, x, dims, cos, sin, use_rope)
+    if kv_override is not None:
+        k, v = kv_override
+    Skv = k.shape[1]
+    # GQA: broadcast KV to the full head count.  An (h -> kv, g) reshape on
+    # the query would strand GSPMD when |model| > n_kv (8 kv heads cannot
+    # shard 16 ways -> scores replicate, 16x memory); with full-width KV the
+    # score einsum keeps the query's head sharding.
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    kg = k  # (B, Skv, h, dh)
+    chunk = min(ctx.get("q_chunk", 2048), S)
+    if S % chunk:
+        # largest divisor of S <= requested chunk, so the serialized
+        # lax.scan path applies to ragged lengths too (VLM: S = 32768+256)
+        c = chunk
+        while S % c:
+            c -= 1
+        chunk = c
+    n_chunks = -(-S // chunk)
+
+    # One (chunk, Skv) score block at a time.  Two code paths:
+    #   * chunk_scan (default, full-program compiles): lax.scan over chunk
+    #     index — a while loop HARD-serialises the chunks, bounding live
+    #     memory to one score block.  (An unrolled python loop gets its
+    #     chunks interleaved by the scheduler: 32 live score blocks put
+    #     prefill_32k at 36 GB/device; optimization_barrier is stripped by
+    #     the backend before scheduling, verified empirically.)
+    #   * unrolled (roofline A/B cost programs): every chunk appears in the
+    #     HLO so compiled cost_analysis is exact (scan bodies count once).
+    js = jnp.arange(Skv)
+    out = jnp.zeros((B, S, h * dh), x.dtype)
+
+    def one_chunk(out, qs, qc):
+        logits = jnp.einsum("bqhd,bshd->bhqs", qc, kg,
+                            preferred_element_type=jnp.float32) * scale
+        iq = qs + jnp.arange(qc.shape[1])
+        if causal:
+            m = js[None, :] <= iq[:, None]
+            if window:
+                m &= (iq[:, None] - js[None, :]) < window
+            logits = jnp.where(m[None, None], logits, NEG)
+        probs = jax.nn.softmax(logits, axis=-1)
+        oc = jnp.einsum("bhqs,bshd->bqhd", probs.astype(x.dtype), v)
+        return jax.lax.dynamic_update_slice(
+            out, oc.reshape(B, -1, h * dh), (0, qs, 0))
+
+    if ctx.get("chunk_scan", True) and n_chunks > 1 and S % chunk == 0:
+        def body(out, ci):
+            qs = ci * chunk
+            qc = jax.lax.dynamic_slice(q, (0, qs, 0, 0), (B, chunk, h, dh))
+            return one_chunk(out, qs, qc), None
+
+        out, _ = jax.lax.scan(body, out, jnp.arange(n_chunks))
+    else:
+        for ci in range(n_chunks):
+            out = one_chunk(out, ci * chunk, q[:, ci * chunk:(ci + 1) * chunk])
+    return dot(out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode with a full KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(n_layers, B, capacity, dims: AttnDims, dtype):
+    kv, dh = dims.n_kv, dims.dh
+    z = jnp.zeros((n_layers, B, kv, capacity, dh), dtype)
+    return {"k": z, "v": z}
+
+
+def attention_decode(p, cache_l, x, dims: AttnDims, ctx, use_rope=True):
+    """One-token decode. cache_l: {'k','v'}: (B, kv, C, dh); ctx['pos'] is the
+    write position (cache holds ``pos`` valid tokens)."""
+    B = x.shape[0]
+    h, kv, dh = dims
+    g = h // kv
+    pos = ctx["pos"]
+    cos, sin = ctx["rope"]  # (1, dh//2) for this position
+    q, k_new, v_new = _qkv(p, x, dims, cos, sin, use_rope)
+    kc = jax.lax.dynamic_update_slice(
+        cache_l["k"], k_new.transpose(0, 2, 1, 3), (0, 0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache_l["v"], v_new.transpose(0, 2, 1, 3), (0, 0, pos, 0))
+    out = _cache_attend(q, kc, vc, valid=jnp.arange(kc.shape[2]) <= pos)
+    return dot(out.reshape(B, 1, h * dh), p["wo"]), {"k": kc, "v": vc}
+
+
+def _cache_attend(q, kc, vc, valid):
+    """q: (B,1,h,dh); kc/vc: (B,kv,C,dh); valid: (C,) bool."""
+    B, _, h, dh = q.shape
+    kv = kc.shape[1]
+    g = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(B, kv, g, dh)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg, kc,
+                        preferred_element_type=jnp.float32) * scale
+    logits = jnp.where(valid[None, None, None], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", probs.astype(vc.dtype), vc,
+                     preferred_element_type=jnp.float32).astype(vc.dtype)
+    return out.reshape(B, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Sliding-window decode (ring buffer)
+# ---------------------------------------------------------------------------
+
+def init_window_cache(n_layers, B, window, dims: AttnDims, dtype):
+    kv, dh = dims.n_kv, dims.dh
+    z = jnp.zeros((n_layers, B, kv, window, dh), dtype)
+    return {"k": z, "v": z,
+            "slot_pos": jnp.full((n_layers, window), -1, jnp.int32)}
+
+
+def attention_decode_window(p, cache_l, x, dims: AttnDims, ctx, window: int):
+    B = x.shape[0]
+    h, kv, dh = dims
+    pos = ctx["pos"]
+    cos, sin = ctx["rope"]
+    q, k_new, v_new = _qkv(p, x, dims, cos, sin)
+    slot = pos % window
+    kc = jax.lax.dynamic_update_slice(
+        cache_l["k"], k_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+    vc = jax.lax.dynamic_update_slice(
+        cache_l["v"], v_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache_l["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+    out = _cache_attend(q, kc, vc, valid)
+    return (dot(out.reshape(B, 1, h * dh), p["wo"]),
+            {"k": kc, "v": vc, "slot_pos": slot_pos})
+
+
+# ---------------------------------------------------------------------------
+# Clustered-KV decode — the paper's technique as an attention operand
+# ---------------------------------------------------------------------------
+
+def init_clustered_cache(n_layers, B, n_centroids, window, dims: AttnDims, dtype):
+    kv, dh = dims.n_kv, dims.dh
+    zc = jnp.zeros((n_layers, B, kv, n_centroids, dh), dtype)
+    zw = jnp.zeros((n_layers, B, kv, window, dh), dtype)
+    return {
+        "kc": zc, "vc": zc,
+        "counts": jnp.zeros((n_layers, B, kv, n_centroids), jnp.float32),
+        "wk": zw, "wv": zw,
+        "slot_pos": jnp.full((n_layers, window), -1, jnp.int32),
+    }
+
+
+def attention_decode_clustered(p, cache_l, x, dims: AttnDims, ctx):
+    """Decode against [k-means centroids of the old cache ‖ exact recent
+    window].  Softmax merged across both parts by log-sum-exp; the centroid
+    logits carry a log(count) bias (see kernels/cluster_attn.py)."""
+    B = x.shape[0]
+    h, kv, dh = dims
+    g = h // kv
+    scale = dh ** -0.5
+    pos = ctx["pos"]
+    cos, sin = ctx["rope"]
+    window = cache_l["wk"].shape[3]
+    q, k_new, v_new = _qkv(p, x, dims, cos, sin)
+    qg = q.reshape(B, kv, g, dh)
+
+    # window ring-buffer update
+    slot = pos % window
+    wk = jax.lax.dynamic_update_slice(
+        cache_l["wk"], k_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+    wv = jax.lax.dynamic_update_slice(
+        cache_l["wv"], v_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
+    slot_pos = jax.lax.dynamic_update_slice(
+        cache_l["slot_pos"], pos[None].astype(jnp.int32), (slot,))
+    w_valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+
+    # exact-window logits
+    lw = jnp.einsum("bkgd,bksd->bkgs", qg, wk,
+                    preferred_element_type=jnp.float32) * scale
+    lw = jnp.where(w_valid[None, None, None], lw, NEG)
+
+    # centroid logits with log-count bias
+    kc, vc, counts = cache_l["kc"], cache_l["vc"], cache_l["counts"]
+    lc = jnp.einsum("bkgd,bknd->bkgn", qg, kc,
+                    preferred_element_type=jnp.float32) * scale
+    bias = jnp.where(counts > 0, jnp.log(jnp.maximum(counts, 1e-9)), NEG)
+    lc = lc + bias[:, :, None, :]
+
+    # merged softmax over [centroids ‖ window]
+    m = jnp.maximum(jnp.max(lc, -1), jnp.max(lw, -1))        # (B,kv,g)
+    pc = jnp.exp(lc - m[..., None])
+    pw = jnp.exp(lw - m[..., None])
+    denom = jnp.sum(pc, -1) + jnp.sum(pw, -1)
+    oc = jnp.einsum("bkgn,bknd->bkgd", pc.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    ow = jnp.einsum("bkgs,bksd->bkgd", pw.astype(wv.dtype), wv,
+                    preferred_element_type=jnp.float32)
+    out = ((oc + ow) / denom[..., None]).astype(x.dtype).reshape(B, 1, h * dh)
+
+    new_cache = dict(cache_l, wk=wk, wv=wv, slot_pos=slot_pos)
+    return dot(out, p["wo"]), new_cache
+
+
+def compress_kv_cache(k, v, *, chunk: int, compression: int, iters: int = 8,
+                      key=None):
+    """Build the clustered cache from a full (B, kv, S, dh) cache — the paper
+    pipeline applied to keys: contiguous ``chunk``-sized subclusters (the
+    TPU-friendly equal-sized scheme: recency order plays distance-to-L),
+    per-chunk k-means on keys, value centroids are assignment-weighted means.
+    Returns (kc, vc, counts) with S//compression centroids."""
+    from repro.core.kmeans import kmeans, update_centers
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    B, kv, S, dh = k.shape
+    n_chunks = S // chunk
+    kl = max(1, chunk // compression)
+
+    kk = k.reshape(B * kv * n_chunks, chunk, dh).astype(jnp.float32)
+    vv = v.reshape(B * kv * n_chunks, chunk, dh).astype(jnp.float32)
+    keys = jax.random.split(key, kk.shape[0])
+
+    def one(kc_, vc_, kk_):
+        res = kmeans(kc_, kl, iters=iters, key=kk_, init="kmeans++")
+        vsum, cnt = update_centers(vc_, jnp.ones((chunk,), jnp.float32),
+                                   res.assignment, kl, jnp.zeros((kl, dh)))
+        return res.centers, vsum, res.counts
+
+    kc, vc, counts = jax.vmap(one)(kk, vv, keys)
+    kc = kc.reshape(B, kv, n_chunks * kl, dh).astype(k.dtype)
+    vc = vc.reshape(B, kv, n_chunks * kl, dh).astype(v.dtype)
+    counts = counts.reshape(B, kv, n_chunks * kl)
+    return kc, vc, counts

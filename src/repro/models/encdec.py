@@ -1,0 +1,242 @@
+"""Whisper-style encoder-decoder backbone (conv/audio frontend is a STUB per
+the assignment: ``input_specs`` supplies precomputed frame embeddings).
+
+Encoder: bidirectional self-attention over ``encoder_ctx`` frames with
+sinusoidal positions.  Decoder: causal self-attention (RoPE) + cross
+attention into the encoder output + SwiGLU FFN.  Decode caches the decoder
+self-attention KV plus the per-layer cross-attention K/V projected once from
+the encoder output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from .attention import (AttnDims, attention, attention_decode, init_attn,
+                        init_kv_cache)
+from .layers import (cross_entropy, dot, embed_init, ninit, rms_norm,
+                     rope_tables, swiglu)
+from .lm import constrain
+
+Array = jax.Array
+
+
+def _sinusoid(n: int, d: int) -> Array:
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    i = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * i / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+class EncDecLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.dh)
+
+    # -- init ----------------------------------------------------------------
+    def _enc_layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 2)
+        p = {"ln1": jnp.zeros((cfg.d_model,), self.dtype),
+             "attn": init_attn(ks[0], cfg.d_model, self.dims, self.dtype),
+             "ln2": jnp.zeros((cfg.d_model,), self.dtype)}
+        p.update(self._ffn_init(ks[1]))
+        return p
+
+    def _dec_layer_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        p = {"ln1": jnp.zeros((cfg.d_model,), self.dtype),
+             "attn": init_attn(ks[0], cfg.d_model, self.dims, self.dtype),
+             "lnx": jnp.zeros((cfg.d_model,), self.dtype),
+             "xattn": init_attn(ks[1], cfg.d_model, self.dims, self.dtype),
+             "ln2": jnp.zeros((cfg.d_model,), self.dtype)}
+        p.update(self._ffn_init(ks[2]))
+        return p
+
+    def _ffn_init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, 3)
+        s = cfg.d_model ** -0.5
+        return {"w1": ninit(ks[0], (cfg.d_model, cfg.d_ff), s, self.dtype),
+                "w3": ninit(ks[1], (cfg.d_model, cfg.d_ff), s, self.dtype),
+                "w2": ninit(ks[2], (cfg.d_ff, cfg.d_model),
+                            cfg.d_ff ** -0.5, self.dtype)}
+
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, 5)
+        return {
+            "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                self.dtype),
+            "head": ninit(ks[1], (cfg.d_model, cfg.padded_vocab),
+                          cfg.d_model ** -0.5, self.dtype),
+            "final_ln": jnp.zeros((cfg.d_model,), self.dtype),
+            "enc": jax.vmap(self._enc_layer_init)(
+                jax.random.split(ks[2], cfg.encoder_layers)),
+            "dec": jax.vmap(self._dec_layer_init)(
+                jax.random.split(ks[3], cfg.n_layers)),
+            "enc_ln": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+
+    # -- encoder ---------------------------------------------------------------
+    def encode(self, params, frames, ctx, *, unroll=False):
+        """frames: (B, T_enc, d) precomputed embeddings (stub frontend)."""
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        x = (frames.astype(self.dtype)
+             + _sinusoid(frames.shape[1], cfg.d_model).astype(self.dtype))
+        x = constrain(x, ctx)
+        ectx = dict(ctx, rope=(None, None))
+
+        def layer(x, p):
+            h = x + attention(p["attn"], rms_norm(x, p["ln1"], eps), self.dims,
+                              ectx, causal=False, use_rope=False)
+            h = h + swiglu(rms_norm(h, p["ln2"], eps),
+                           p["w1"], p["w3"], p["w2"])
+            return (constrain(h, ctx), None)
+
+        if unroll:
+            for i in range(params["enc"]["ln1"].shape[0]):
+                x, _ = layer(x, jax.tree.map(lambda a: a[i], params["enc"]))
+        else:
+            x, _ = jax.lax.scan(lambda c, p: layer(c, p), x, params["enc"])
+        return rms_norm(x, params["enc_ln"], eps)
+
+    # -- decoder (training) ------------------------------------------------
+    def embed_in(self, params, batch, ctx):
+        from .lm import constrain as _c
+        x = params["embed"][batch["tokens"]].astype(self.dtype)
+        return _c(x, ctx)
+
+    def loss_embedded(self, params, x, rest, ctx, *, remat=True,
+                      aux_weight=0.0, unroll=False):
+        """Trainer-hoisted embed path (see DecoderLM.loss_embedded)."""
+        logits, _ = self._decode_stack(params, x, rest["frames"], ctx,
+                                       remat=remat, unroll=unroll)
+        return cross_entropy(logits, rest["labels"])
+
+    def forward(self, params, batch, ctx, *, remat=True, unroll=False,
+                last_only=False):
+        x = params["embed"][batch["tokens"]].astype(self.dtype)
+        return self._decode_stack(params, x, batch["frames"], ctx,
+                                  remat=remat, unroll=unroll,
+                                  last_only=last_only)
+
+    def _decode_stack(self, params, x, frames, ctx, *, remat=True,
+                      unroll=False, last_only=False):
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        enc = self.encode(params, frames, ctx, unroll=unroll)
+
+        def layer(carry, p):
+            x, enc = carry
+            h = x + attention(p["attn"], rms_norm(x, p["ln1"], eps),
+                              self.dims, ctx)
+            xn = rms_norm(h, p["lnx"], eps)
+            kv, dh = self.dims.n_kv, self.dims.dh
+            ek = dot(enc, p["xattn"]["wk"]).reshape(
+                enc.shape[0], enc.shape[1], kv, dh)
+            ev = dot(enc, p["xattn"]["wv"]).reshape(
+                enc.shape[0], enc.shape[1], kv, dh)
+            h = h + attention(p["xattn"], xn, self.dims, ctx, causal=False,
+                              kv_override=(ek, ev), use_rope=False)
+            h = h + swiglu(rms_norm(h, p["ln2"], eps),
+                           p["w1"], p["w3"], p["w2"])
+            return (constrain(h, ctx), enc), None
+
+        body = layer
+        if remat:
+            body = jax.checkpoint(
+                lambda c, p: layer(c, p),
+                policy=jax.checkpoint_policies.nothing_saveable)
+        if unroll:
+            carry = (x, enc)
+            for i in range(cfg.n_layers):
+                carry, _ = body(carry, jax.tree.map(lambda a: a[i],
+                                                    params["dec"]))
+            x, _ = carry
+        else:
+            (x, _), _ = jax.lax.scan(body, (x, enc), params["dec"])
+        if last_only:
+            x = x[:, -1:]
+        xn = rms_norm(x, params["final_ln"], eps)
+        logits = jax.lax.dot_general(xn, params["head"], (((2,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        logits = constrain(logits, ctx, "logits_spec")
+        return logits, jnp.zeros((), jnp.float32)
+
+    def loss(self, params, batch, ctx, *, remat=True, aux_weight=0.0,
+             unroll=False):
+        logits, _ = self.forward(params, batch, ctx, remat=remat,
+                                 unroll=unroll)
+        return cross_entropy(logits, batch["labels"])
+
+    def make_ctx(self, positions, *, q_chunk=2048, act_spec=None,
+                 cache_kind="full", pos=None, chunk_scan=True):
+        cfg = self.cfg
+        logits_spec = None
+        if act_spec is not None:
+            from jax.sharding import PartitionSpec as _P
+            logits_spec = _P(*list(act_spec)[:-1], "model")
+        ctx = {"rope": rope_tables(positions, cfg.dh, cfg.rope_theta),
+               "q_chunk": q_chunk, "act_spec": act_spec,
+               "logits_spec": logits_spec, "embed_spec": act_spec,
+               "cache_kind": cache_kind, "chunk_scan": chunk_scan}
+        if pos is not None:
+            ctx["pos"] = pos
+        return ctx
+
+    # -- decode --------------------------------------------------------------
+    def init_caches(self, B, shape: ShapeConfig, kind: str):
+        cfg = self.cfg
+        self_kv = init_kv_cache(cfg.n_layers, B, shape.seq_len, self.dims,
+                                self.dtype)
+        z = jnp.zeros((cfg.n_layers, B, self.dims.n_kv, cfg.encoder_ctx,
+                       self.dims.dh), self.dtype)
+        return {"self": self_kv, "xk": z, "xv": z}
+
+    def decode_step(self, params, caches, token, pos, *, ctx_extra=None,
+                    unroll=False):
+        cfg = self.cfg
+        eps = cfg.norm_eps
+        ctx = self.make_ctx(pos[None], pos=pos, **(ctx_extra or {}))
+        x = params["embed"][token].astype(self.dtype)
+
+        def body(x, pc):
+            p, sc, xk, xv = pc
+            xn = rms_norm(x, p["ln1"], eps)
+            a, sc = attention_decode(p["attn"], sc, xn, self.dims, ctx)
+            h = x + a
+            # cross attention against the cached encoder projections
+            xq = rms_norm(h, p["lnx"], eps)
+            from .attention import _cache_attend, _qkv
+            q = dot(xq, p["xattn"]["wq"]).reshape(
+                x.shape[0], 1, self.dims.n_heads, self.dims.dh)
+            out = _cache_attend(q, xk, xv,
+                                valid=jnp.ones((xk.shape[2],), bool))
+            h = h + dot(out.reshape(x.shape[0], 1, -1), p["xattn"]["wo"])
+            h = h + swiglu(rms_norm(h, p["ln2"], eps),
+                           p["w1"], p["w3"], p["w2"])
+            return h, sc
+
+        if unroll:
+            scs = []
+            for i in range(cfg.n_layers):
+                x, sc = body(x, jax.tree.map(
+                    lambda a: a[i], (params["dec"], caches["self"],
+                                     caches["xk"], caches["xv"])))
+                scs.append(sc)
+            new_self = jax.tree.map(lambda *xs: jnp.stack(xs), *scs)
+        else:
+            x, new_self = jax.lax.scan(
+                body, x, (params["dec"], caches["self"], caches["xk"],
+                          caches["xv"]))
+        xn = rms_norm(x, params["final_ln"], eps)
+        logits = jax.lax.dot_general(xn, params["head"], (((2,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        return logits, dict(caches, self=new_self)

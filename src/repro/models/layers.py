@@ -1,0 +1,86 @@
+"""Shared neural-net layers (hand-rolled: no flax offline).
+
+Conventions:
+  * params are plain nested dicts of jnp arrays;
+  * weights live in ``cfg.dtype`` (bf16), matmuls accumulate fp32 via
+    ``preferred_element_type`` and cast back;
+  * norms run in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def dot(x: Array, w: Array) -> Array:
+    # bf16 in / bf16 out: the TPU MXU accumulates bf16 dots in f32
+    # internally, so this is numerically the f32-accumulate pattern WITHOUT
+    # materialising f32 operands/outputs — GSPMD then all-gathers/reduces
+    # bf16 (measured 2x collective + memory traffic when an explicit
+    # preferred_element_type=f32 round-trip was requested).
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())))
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def swiglu(x: Array, w1: Array, w3: Array, w2: Array) -> Array:
+    return dot(jax.nn.silu(dot(x, w1).astype(jnp.float32)).astype(x.dtype)
+               * dot(x, w3), w2)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions: Array, dh: int, theta: float) -> tuple[Array, Array]:
+    """cos/sin tables for given integer positions: (..., dh//2) fp32."""
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (..., S, n, dh); cos/sin: (S, dh//2) or broadcastable."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)   # (S, 1, half)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Initialisers
+# ---------------------------------------------------------------------------
+
+def ninit(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    if scale is None:
+        scale = d_in ** -0.5
+    return ninit(key, (d_in, d_out), scale, dtype)
+
+
+def embed_init(key, vocab, d, dtype):
+    return ninit(key, (vocab, d), 0.02, dtype)
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Array | None = None) -> Array:
+    """Mean token NLL; logits fp32-stabilised. labels: int32 (..., S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

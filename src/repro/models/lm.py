@@ -1,0 +1,486 @@
+"""Decoder-only LM assembly: embeddings -> scanned block groups -> head.
+
+Layer stacks are organised as *groups*: a group is (n repeats x one
+superblock function), scanned with ``lax.scan`` over stacked params so the
+HLO stays one-superblock-sized at 95 layers.  Heterogeneous patterns
+(gemma3's 5 local : 1 global, xlstm's 7 mLSTM : 1 sLSTM, zamba2's
+9 mamba : shared-attn) unroll *inside* the superblock.
+
+The forward scan carry is (x, aux, shared): ``aux`` accumulates MoE
+load-balance loss, ``shared`` carries zamba2's weight-tied attention block
+*explicitly* (closure-captured tracers do not differentiate through
+jax.checkpoint; riding the carry keeps remat + grads correct and lets scan
+accumulate the shared block's gradient across superblocks for free).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from .attention import (AttnDims, attention, attention_decode,
+                        attention_decode_clustered, attention_decode_window,
+                        init_attn, init_clustered_cache, init_kv_cache,
+                        init_window_cache)
+from .layers import (cross_entropy, dot, embed_init, ninit, rms_norm,
+                     rope_tables, swiglu)
+from .moe import init_moe, moe_ffn, moe_ffn_decode
+from .ssm import (init_mamba2, init_mamba2_cache, init_mlstm,
+                  init_mlstm_cache, init_slstm, init_slstm_cache,
+                  mamba2_block, mamba2_decode, mlstm_block, mlstm_decode,
+                  slstm_block, slstm_decode)
+
+Array = jax.Array
+
+# perf-experiment hook (benchmarks/perf_iter.py): overrides the MoE dispatch
+# block's PartitionSpec when set (e.g. expert-parallelism over "data").
+EXPERT_SPEC_OVERRIDE = None
+
+
+def constrain(x, ctx, key="act_spec"):
+    spec = ctx.get(key)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+class Group(NamedTuple):
+    name: str
+    n: int
+    init: Callable[[Array], Any]
+    apply: Callable   # (p_layer, carry, ctx) -> carry;  carry=(x, aux, shared)
+    decode: Callable  # (p_layer, cache_l, carry, ctx) -> (carry, cache_l);
+                      #   decode carry = (x, shared)
+    init_cache: Callable  # (B, shape_cfg, kind) -> stacked cache (n, ...)
+    layers_per_step: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Block builders
+# ---------------------------------------------------------------------------
+
+def _ffn_init(key, cfg, dtype):
+    ks = jax.random.split(key, 3)
+    s = cfg.d_model ** -0.5
+    return {"w1": ninit(ks[0], (cfg.d_model, cfg.d_ff), s, dtype),
+            "w3": ninit(ks[1], (cfg.d_model, cfg.d_ff), s, dtype),
+            "w2": ninit(ks[2], (cfg.d_ff, cfg.d_model), cfg.d_ff ** -0.5, dtype)}
+
+
+def make_attn_block(cfg: ArchConfig, *, window: int = 0, moe: bool = False):
+    dims = AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.dh)
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        p = {"ln1": jnp.zeros((cfg.d_model,), dtype),
+             "attn": init_attn(ks[0], cfg.d_model, dims, dtype),
+             "ln2": jnp.zeros((cfg.d_model,), dtype)}
+        if moe:
+            p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                                dtype, shared_expert=cfg.name.startswith("llama4"))
+        else:
+            p.update(_ffn_init(ks[1], cfg, dtype))
+        return p
+
+    def apply(p, carry, ctx):
+        x, aux, shared = carry
+        x = constrain(x, ctx, "act_in_spec")
+        h = x + attention(p["attn"], rms_norm(x, p["ln1"], eps), dims, ctx,
+                          window=window)
+        h = constrain(h, ctx)
+        hn = rms_norm(h, p["ln2"], eps)
+        if moe:
+            y, a = moe_ffn(p["moe"], hn, n_experts=cfg.n_experts,
+                           top_k=cfg.experts_per_token,
+                           capacity_factor=cfg.expert_capacity_factor,
+                           expert_spec=ctx.get("expert_spec"))
+            return (constrain(h + y, ctx), aux + a, shared)
+        return (constrain(h + swiglu(hn, p["w1"], p["w3"], p["w2"]), ctx),
+                aux, shared)
+
+    def decode(p, cache_l, x, ctx):
+        xn = rms_norm(x, p["ln1"], eps)
+        kind = ctx.get("cache_kind", "full")
+        if window:
+            a, cache_l = attention_decode_window(p["attn"], cache_l, xn, dims,
+                                                 ctx, window)
+        elif kind == "clustered":
+            a, cache_l = attention_decode_clustered(p["attn"], cache_l, xn,
+                                                    dims, ctx)
+        else:
+            a, cache_l = attention_decode(p["attn"], cache_l, xn, dims, ctx)
+        h = x + a
+        hn = rms_norm(h, p["ln2"], eps)
+        if moe:
+            y = moe_ffn_decode(p["moe"], hn, n_experts=cfg.n_experts,
+                               top_k=cfg.experts_per_token)
+        else:
+            y = swiglu(hn, p["w1"], p["w3"], p["w2"])
+        return h + y, cache_l
+
+    def init_cache(n, B, shape: ShapeConfig, kind: str):
+        if window:
+            return init_window_cache(n, B, min(window, shape.seq_len), dims,
+                                     dtype)
+        if kind == "clustered":
+            nc = shape.seq_len // shape.cluster_compression
+            return init_clustered_cache(n, B, nc, shape.cluster_window, dims,
+                                        dtype)
+        return init_kv_cache(n, B, shape.seq_len, dims, dtype)
+
+    return init, apply, decode, init_cache
+
+
+def make_dense_groups(cfg: ArchConfig) -> list[Group]:
+    init, apply, decode, init_cache = make_attn_block(
+        cfg, moe=cfg.family == "moe")
+
+    def decode_c(p, cache_l, carry, ctx):
+        x, shared = carry
+        x, cache_l = decode(p, cache_l, x, ctx)
+        return (x, shared), cache_l
+
+    return [Group("blocks", cfg.n_layers, init, apply, decode_c,
+                  functools.partial(init_cache, cfg.n_layers))]
+
+
+def make_gemma_groups(cfg: ArchConfig) -> list[Group]:
+    lpg = cfg.local_per_global
+    per = lpg + 1
+    n_super = cfg.n_layers // per
+    li, la, ld, lc = make_attn_block(cfg, window=cfg.window)
+    gi, ga, gd, gc = make_attn_block(cfg)
+
+    def init(key):
+        ks = jax.random.split(key, per)
+        return {"local": jax.vmap(li)(ks[:lpg]), "global": gi(ks[lpg])}
+
+    def apply(p, carry, ctx):
+        for i in range(lpg):
+            carry = la(jax.tree.map(lambda a: a[i], p["local"]), carry, ctx)
+        return ga(p["global"], carry, ctx)
+
+    def decode(p, cache_l, carry, ctx):
+        x, shared = carry
+        new_local = []
+        for i in range(lpg):
+            x, cl = ld(jax.tree.map(lambda a: a[i], p["local"]),
+                       jax.tree.map(lambda a: a[i], cache_l["local"]), x, ctx)
+            new_local.append(cl)
+        x, cg = gd(p["global"], cache_l["global"], x, ctx)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_local)
+        return (x, shared), {"local": stacked, "global": cg}
+
+    def init_cache_stacked(B, shape, kind):
+        one = {"local": lc(lpg, B, shape, "window"),
+               "global": jax.tree.map(lambda a: a[0], gc(1, B, shape, kind))}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape), one)
+
+    return [Group("super", n_super, init, apply, decode, init_cache_stacked,
+                  layers_per_step=per)]
+
+
+def make_xlstm_groups(cfg: ArchConfig) -> list[Group]:
+    mps = cfg.mlstm_per_slstm
+    per = mps + 1
+    n_super = cfg.n_layers // per
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    nh = cfg.n_heads
+
+    def init(key):
+        ks = jax.random.split(key, per)
+        return {"mlstm": jax.vmap(
+                    lambda k: init_mlstm(k, cfg.d_model, nh, dtype))(ks[:mps]),
+                "slstm": init_slstm(ks[mps], cfg.d_model, nh, dtype)}
+
+    def apply(p, carry, ctx):
+        x, aux, shared = carry
+        x = constrain(x, ctx, "act_in_spec")
+        for i in range(mps):
+            x = mlstm_block(jax.tree.map(lambda a: a[i], p["mlstm"]), x, ctx,
+                            n_heads=nh, eps=eps)
+            x = constrain(x, ctx)
+        x = slstm_block(p["slstm"], x, ctx, n_heads=nh, eps=eps)
+        return (constrain(x, ctx), aux, shared)
+
+    def decode(p, cache_l, carry, ctx):
+        x, shared = carry
+        new_m = []
+        for i in range(mps):
+            x, cm = mlstm_decode(jax.tree.map(lambda a: a[i], p["mlstm"]),
+                                 jax.tree.map(lambda a: a[i], cache_l["mlstm"]),
+                                 x, ctx, n_heads=nh, eps=eps)
+            new_m.append(cm)
+        x, cs = slstm_decode(p["slstm"], cache_l["slstm"], x, ctx,
+                             n_heads=nh, eps=eps)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        return (x, shared), {"mlstm": stacked, "slstm": cs}
+
+    def init_cache_stacked(B, shape, kind):
+        one = {"mlstm": init_mlstm_cache(mps, B, cfg.d_model, nh, dtype),
+               "slstm": jax.tree.map(lambda a: a[0],
+                                     init_slstm_cache(1, B, cfg.d_model))}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape), one)
+
+    return [Group("super", n_super, init, apply, decode, init_cache_stacked,
+                  layers_per_step=per)]
+
+
+def make_zamba_groups(cfg: ArchConfig) -> list[Group]:
+    mpa = cfg.mamba_per_attn
+    n_super = cfg.n_layers // mpa
+    dtype = jnp.dtype(cfg.dtype)
+    eps = cfg.norm_eps
+    ai, aa, ad, ac = make_attn_block(cfg)  # the *shared* attention block
+
+    def init(key):
+        ks = jax.random.split(key, mpa)
+        return {"mamba": jax.vmap(
+            lambda k: init_mamba2(k, cfg.d_model, cfg.ssm_state, dtype))(ks)}
+
+    def apply(p, carry, ctx):
+        x, aux, shared = carry
+        x = constrain(x, ctx, "act_in_spec")
+        for i in range(mpa):
+            x = mamba2_block(jax.tree.map(lambda a: a[i], p["mamba"]), x, ctx,
+                             d_state=cfg.ssm_state, eps=eps)
+            x = constrain(x, ctx)
+        # shared attention block: weights tied across superblocks, grads
+        # accumulate through the scan carry.
+        return aa(shared, (x, aux, shared), ctx)
+
+    def decode(p, cache_l, carry, ctx):
+        x, shared = carry
+        new_m = []
+        for i in range(mpa):
+            x, cm = mamba2_decode(jax.tree.map(lambda a: a[i], p["mamba"]),
+                                  jax.tree.map(lambda a: a[i], cache_l["mamba"]),
+                                  x, ctx, d_state=cfg.ssm_state, eps=eps)
+            new_m.append(cm)
+        x, ca = ad(shared, cache_l["attn"], x, ctx)
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_m)
+        return (x, shared), {"mamba": stacked, "attn": ca}
+
+    def init_cache_stacked(B, shape, kind):
+        one = {"mamba": init_mamba2_cache(mpa, B, cfg.d_model, cfg.ssm_state),
+               "attn": jax.tree.map(lambda a: a[0], ac(1, B, shape, kind))}
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_super,) + a.shape), one)
+
+    return [Group("super", n_super, init, apply, decode, init_cache_stacked,
+                  layers_per_step=mpa + 1)]
+
+
+def build_groups(cfg: ArchConfig) -> tuple[list[Group], Optional[Callable]]:
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.local_per_global:
+            groups, shared = make_gemma_groups(cfg), None
+        else:
+            groups, shared = make_dense_groups(cfg), None
+    elif cfg.family == "ssm":
+        groups, shared = make_xlstm_groups(cfg), None
+    elif cfg.family == "hybrid":
+        shared = functools.partial(
+            lambda key, _i=make_attn_block(cfg)[0]: _i(key))
+        groups = make_zamba_groups(cfg)
+    else:
+        raise ValueError(cfg.family)
+    for g in groups:
+        if g.n < 1:
+            raise ValueError(
+                f"{cfg.name}: group {g.name!r} has {g.n} superblocks — "
+                f"n_layers={cfg.n_layers} is smaller than the pattern size")
+    return groups, shared
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+class DecoderLM:
+    """Decoder-only LM (also the VLM backbone: ``n_patches > 0`` prepends
+    projected patch embeddings from the stub frontend)."""
+
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.dtype = jnp.dtype(cfg.dtype)
+        self.groups, self.shared_init = build_groups(cfg)
+
+    # -- params ------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg = self.cfg
+        ks = jax.random.split(key, len(self.groups) + 4)
+        params: dict = {
+            "embed": embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                self.dtype),
+            "final_ln": jnp.zeros((cfg.d_model,), self.dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["head"] = ninit(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                   cfg.d_model ** -0.5, self.dtype)
+        if cfg.n_patches:
+            params["patch_proj"] = ninit(ks[2], (cfg.d_model, cfg.d_model),
+                                         cfg.d_model ** -0.5, self.dtype)
+        if self.shared_init is not None:
+            params["shared"] = self.shared_init(ks[3])
+        for i, g in enumerate(self.groups):
+            gks = jax.random.split(ks[4 + i], g.n)
+            params[f"g_{g.name}"] = jax.vmap(g.init)(gks)
+        return params
+
+    # -- context -----------------------------------------------------------
+    def make_ctx(self, positions, *, q_chunk=2048, act_spec=None,
+                 cache_kind="full", pos=None, chunk_scan=True) -> dict:
+        cfg = self.cfg
+        embed_spec = act_spec  # replicated table: gather is born on-spec
+        logits_spec = None
+        act_in_spec = None
+        if act_spec is not None:
+            from jax.sharding import PartitionSpec as _P
+            parts = list(act_spec)
+            used = [a for p_ in parts if p_ for a in
+                    (p_ if isinstance(p_, tuple) else (p_,))]
+            # vocab-shard logits unless the act spec already consumes
+            # "model" (sequence-parallel residual: S-sharded logits instead)
+            logits_spec = (act_spec if "model" in used
+                           else _P(*parts[:-1], "model"))
+            expert_spec = (EXPERT_SPEC_OVERRIDE
+                           or _P(parts[0], "model", None, None))
+            if "model" in used:
+                # act-shard: gather the residual to full-d IN BF16 at block
+                # entry — otherwise GSPMD hoists the gather above the
+                # norm's f32 cast and moves 2x the bytes (measured).
+                act_in_spec = _P(parts[0], None, None)
+        ctx = {
+            "rope": rope_tables(positions, cfg.dh, cfg.rope_theta),
+            "q_chunk": q_chunk, "ssm_chunk": 256, "act_spec": act_spec,
+            "embed_spec": embed_spec, "logits_spec": logits_spec,
+            "expert_spec": (expert_spec if act_spec is not None else None),
+            "act_in_spec": act_in_spec,
+            "cache_kind": cache_kind, "chunk_scan": chunk_scan,
+        }
+        if pos is not None:
+            ctx["pos"] = pos
+        return ctx
+
+    # -- forward -----------------------------------------------------------
+    def embed_in(self, params, batch, ctx):
+        x = params["embed"][batch["tokens"]].astype(self.dtype)
+        # stage through the gather's NATURAL layout (batch-sharded, d over
+        # "model") before the residual-stream spec — a direct jump makes
+        # GSPMD emit a full-rematerialisation reshard (and a partitioner
+        # crash on the 2-pod mesh).
+        x = constrain(x, ctx, "embed_spec")
+        if self.cfg.n_patches:
+            patches = dot(batch["patches"].astype(self.dtype),
+                          params["patch_proj"])
+            patches = constrain(patches, ctx, "embed_spec")
+            x = jnp.concatenate([patches, x], axis=1)
+        return constrain(x, ctx)
+
+    def head_out(self, params, x, ctx=None):
+        xn = rms_norm(x, params["final_ln"], self.cfg.norm_eps)
+        w = (params["embed"].T if self.cfg.tie_embeddings else params["head"])
+        logits = jax.lax.dot_general(
+            xn, w, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if ctx is not None:
+            # vocab-shard the logits (matters for tied embeddings, whose
+            # replicated table would otherwise yield replicated logits)
+            logits = constrain(logits, ctx, "logits_spec")
+        return logits
+
+    def run_groups(self, params, x, ctx, *, remat=True, unroll=False):
+        carry = (x, jnp.zeros((), jnp.float32), params.get("shared"))
+        for g in self.groups:
+            # ctx is closure-bound (it holds non-array leaves); grads flow
+            # only through the explicit (p, carry) args — rope tables etc.
+            # in ctx are non-differentiable constants.
+            apply = lambda p, c, _a=g.apply: _a(p, c, ctx)
+            if remat:
+                apply = jax.checkpoint(
+                    apply, policy=jax.checkpoint_policies.nothing_saveable)
+
+            if unroll:
+                # python-loop unroll: every layer appears in the HLO, so
+                # compiled cost_analysis is exact (A/B roofline parts).
+                for i in range(g.n):
+                    p_i = jax.tree.map(lambda a: a[i], params[f"g_{g.name}"])
+                    carry = apply(p_i, carry)
+            else:
+                def scan_body(c, p, _apply=apply):
+                    return _apply(p, c), None
+
+                carry, _ = jax.lax.scan(scan_body, carry,
+                                        params[f"g_{g.name}"])
+        return carry[0], carry[1]
+
+    def forward(self, params, batch, ctx, *, remat=True, unroll=False,
+                last_only=False):
+        x = self.embed_in(params, batch, ctx)
+        x, aux = self.run_groups(params, x, ctx, remat=remat, unroll=unroll)
+        if last_only:  # serving prefill: next-token logits only — the full
+            x = x[:, -1:]   # (B,S,V) fp32 logits buffer never materialises
+        return self.head_out(params, x, ctx), aux
+
+    def loss(self, params, batch, ctx, *, remat=True, aux_weight=0.01,
+             unroll=False):
+        logits, aux = self.forward(params, batch, ctx, remat=remat,
+                                   unroll=unroll)
+        if self.cfg.n_patches:  # loss only on the text positions
+            logits = logits[:, self.cfg.n_patches:]
+        return cross_entropy(logits, batch["labels"]) + aux_weight * aux
+
+    def loss_embedded(self, params, x, rest, ctx, *, remat=True,
+                      aux_weight=0.01, unroll=False):
+        """Loss from pre-embedded inputs — lets the trainer hoist the embed
+        gather out of the gradient-accumulation scan (one lookup per step
+        instead of per microbatch; also sidesteps a GSPMD gather-reshard
+        partitioner bug inside while loops on the 3-axis mesh).
+        ``rest`` carries the non-token batch leaves (labels, ...)."""
+        x, aux = self.run_groups(params, x, ctx, remat=remat, unroll=unroll)
+        logits = self.head_out(params, x, ctx)
+        if self.cfg.n_patches:
+            logits = logits[:, self.cfg.n_patches:]
+        return cross_entropy(logits, rest["labels"]) + aux_weight * aux
+
+    # -- decode ------------------------------------------------------------
+    def init_caches(self, B, shape: ShapeConfig, kind: str):
+        return {g.name: g.init_cache(B, shape, kind) for g in self.groups}
+
+    def decode_step(self, params, caches, token, pos, *, ctx_extra=None,
+                    unroll=False):
+        """token: (B, 1) int32; pos: () int32 write position.
+        -> (logits (B, 1, V), new caches)."""
+        ctx = self.make_ctx(pos[None], pos=pos, **(ctx_extra or {}))
+        x = params["embed"][token].astype(self.dtype)
+        carry = (x, params.get("shared"))
+        new_caches = {}
+        for g in self.groups:
+            if unroll:
+                ncs = []
+                for i in range(g.n):
+                    p_i = jax.tree.map(lambda a: a[i], params[f"g_{g.name}"])
+                    c_i = jax.tree.map(lambda a: a[i], caches[g.name])
+                    carry, nc_i = g.decode(p_i, c_i, carry, ctx)
+                    ncs.append(nc_i)
+                new_caches[g.name] = jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *ncs)
+                continue
+
+            def body(c, pc, _g=g):
+                p_l, cache_l = pc
+                return _g.decode(p_l, cache_l, c, ctx)
+
+            carry, nc = jax.lax.scan(body, carry,
+                                     (params[f"g_{g.name}"], caches[g.name]))
+            new_caches[g.name] = nc
+        return self.head_out(params, carry[0]), new_caches

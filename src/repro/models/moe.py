@@ -1,0 +1,147 @@
+"""Mixture-of-Experts FFN with sort/gather dispatch.
+
+Dispatch reuses the capacity machinery of the paper's *unequal-sized
+subclustering* (core/subcluster.py): token-choice entries are sorted by
+expert id, ranked within their expert, capacity-bounded, and gathered into
+dense (B, E, C, d) blocks — no (T, E, C) one-hot tensor is ever built
+(the previous einsum dispatch was O(T*E*C): 43 TB for dbrx prefill_32k).
+Experts shard over the "model" mesh axis (expert parallelism); the gathers/
+scatters stay batch-local under GSPMD.
+
+Decode routes the (B, 1) token batch *across* sequences with a capacity
+floor, so a single-token request is never dropped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dot, ninit
+
+Array = jax.Array
+
+
+def init_moe(key, d, d_ff, n_experts, dtype, shared_expert: bool):
+    ks = jax.random.split(key, 7)
+    s = d ** -0.5
+    p = {
+        "router": ninit(ks[0], (d, n_experts), s, jnp.float32),
+        "we1": ninit(ks[1], (n_experts, d, d_ff), s, dtype),
+        "we3": ninit(ks[2], (n_experts, d, d_ff), s, dtype),
+        "we2": ninit(ks[3], (n_experts, d_ff, d), d_ff ** -0.5, dtype),
+    }
+    if shared_expert:
+        p["w1"] = ninit(ks[4], (d, d_ff), s, dtype)
+        p["w3"] = ninit(ks[5], (d, d_ff), s, dtype)
+        p["w2"] = ninit(ks[6], (d_ff, d), d_ff ** -0.5, dtype)
+    return p
+
+
+def _route(x, router, K):
+    """-> (gates_full (B,S,E) f32, gate_k, ids_k (B,S,K), aux loss)."""
+    E = router.shape[-1]
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), router)
+    gates_full = jax.nn.softmax(logits, axis=-1)
+    gate_k, ids_k = jax.lax.top_k(gates_full, K)
+    gate_k = gate_k / jnp.maximum(gate_k.sum(-1, keepdims=True), 1e-9)
+    me = jnp.mean(gates_full, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(ids_k, E, dtype=jnp.float32),
+                          axis=2), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+    return gates_full, gate_k, ids_k, aux
+
+
+def _dispatch_indices(expert: Array, E: int, C: int):
+    """expert: (B, T) int32 -> (slot_token_source (B, E*C) in [0, T] with T =
+    'dropped' sentinel, keep mask implicit via sentinel)."""
+    B, T = expert.shape
+    order = jnp.argsort(expert, axis=1, stable=True)           # (B, T)
+    sorted_e = jnp.take_along_axis(expert, order, axis=1)
+    # rank of each sorted entry within its expert segment
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)  # (B, E)
+    seg_start = jnp.take_along_axis(starts, sorted_e, axis=1)
+    rank = jnp.arange(T)[None, :] - seg_start
+    keep = rank < C
+    slot = jnp.where(keep, sorted_e * C + rank, E * C)         # (B, T)
+    flat = jnp.full((B, E * C + 1), T, jnp.int32)
+    bidx = jnp.arange(B)[:, None]
+    flat = flat.at[bidx, slot].set(order.astype(jnp.int32), mode="drop")
+    return flat[:, : E * C]                                    # (B, E*C)
+
+
+def moe_ffn(p, x, *, n_experts: int, top_k: int, capacity_factor: float,
+            min_capacity: int = 4, expert_spec=None):
+    """x: (B, S, d) -> (y, aux_loss).  ``expert_spec``: PartitionSpec for
+    the (B, E, C, d) dispatch block — anchors expert parallelism (E over
+    "model") so the f32 expert activations never replicate."""
+    B, S, d = x.shape
+    E, K = n_experts, top_k
+    T = S * K
+    C = max(min_capacity, int(-(-T // E) * capacity_factor))
+    C = min(C, T)
+
+    gates_full, gate_k, ids_k, aux = _route(x, p["router"], K)
+    expert = ids_k.reshape(B, T)
+    gate = gate_k.reshape(B, T)
+
+    slot_src = _dispatch_indices(expert, E, C)                 # (B, E*C)
+    tok_of_entry = slot_src // K                               # entry -> token
+    tok_of_entry = jnp.where(slot_src < T, tok_of_entry, S)    # sentinel
+
+    gpad = jnp.concatenate([gate, jnp.zeros((B, 1), gate.dtype)], 1)
+    gslot = jnp.take_along_axis(
+        gpad, jnp.minimum(slot_src, T), axis=1)                # (B, E*C)
+
+    xp = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    xe = jnp.take_along_axis(
+        xp, tok_of_entry[..., None], axis=1).reshape(B, E, C, d)
+    if expert_spec is not None:
+        xe = jax.lax.with_sharding_constraint(xe, expert_spec)
+
+    h = jnp.einsum("becd,edf->becf", xe, p["we1"])
+    h3 = jnp.einsum("becd,edf->becf", xe, p["we3"])
+    hh = (jax.nn.silu(h.astype(jnp.float32))
+          * h3.astype(jnp.float32)).astype(x.dtype)
+    ye = jnp.einsum("becf,efd->becd", hh, p["we2"])
+    ye = ye * gslot.reshape(B, E, C, 1).astype(x.dtype)
+
+    # combine by GATHER (scatter-add would replicate the batch dim under
+    # GSPMD): invert the dispatch permutation, then for each of the K
+    # choices pull that token's expert output and accumulate.
+    slot_of_entry = jnp.full((B, T), E * C, jnp.int32)
+    order = jnp.argsort(expert, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(expert, order, axis=1)
+    starts = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(E)))(sorted_e)
+    seg_start = jnp.take_along_axis(starts, sorted_e, axis=1)
+    rank = jnp.arange(T)[None, :] - seg_start
+    keep = rank < C
+    slot_sorted = jnp.where(keep, sorted_e * C + rank, E * C)
+    bidx = jnp.arange(B)[:, None]
+    slot_of_entry = slot_of_entry.at[bidx, order].set(
+        slot_sorted.astype(jnp.int32))                         # (B, T)
+
+    ye_flat = jnp.concatenate(
+        [ye.reshape(B, E * C, d), jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    y = jnp.zeros((B, S, d), x.dtype)
+    for kk in range(K):
+        sl = slot_of_entry[:, kk::K]                           # (B, S)
+        y = y + jnp.take_along_axis(ye_flat, sl[..., None], axis=1)
+
+    if "w1" in p:  # shared expert (llama4)
+        from .layers import swiglu
+        y = y + swiglu(x, p["w1"], p["w3"], p["w2"])
+    return y, aux
+
+
+def moe_ffn_decode(p, x, *, n_experts: int, top_k: int):
+    """Single-token decode: route the (B, 1) token batch across sequences.
+    The capacity floor (2x fair share, >= top_k + 4) makes single-request
+    drops impossible and batch drops rare."""
+    B, S, d = x.shape  # S == 1
+    xt = x.reshape(1, B, d)
+    cap = max(top_k + 4, int(-(-B * top_k // n_experts) * 2))
+    y, _ = moe_ffn(p, xt, n_experts=n_experts, top_k=top_k,
+                   capacity_factor=2.0, min_capacity=cap)
+    return y.reshape(B, S, d)

@@ -1,0 +1,81 @@
+"""Model registry + workload input specs.
+
+``build_model(cfg)`` -> model object exposing init / loss / forward /
+init_caches / decode_step / make_ctx.
+
+``input_specs(cfg, shape)`` -> dict of jax.ShapeDtypeStruct stand-ins for
+every model input of that workload (weak-type-correct, shardable, no device
+allocation) — the dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeConfig
+from .encdec import EncDecLM
+from .lm import DecoderLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def cache_kind(cfg: ArchConfig, shape: ShapeConfig) -> str:
+    """Which decode cache the (arch x shape) cell uses.  long_500k on
+    attention archs uses the paper's clustered-KV compression."""
+    if shape.kind != "decode":
+        return "full"
+    if shape.cluster_compression and cfg.family in ("dense", "moe", "vlm",
+                                                    "hybrid"):
+        # hybrid (zamba2): mamba layers decode natively; only the shared
+        # attention block's cache is clustered.
+        return "clustered"
+    return "full"
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStructs for the *data* inputs of the workload step."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            return {
+                "frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_ctx, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "labels": jax.ShapeDtypeStruct((B, S), i32),
+            }
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.n_patches:
+            specs["patches"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        return specs
+    # decode: one new token + the cache (cache specs come from eval_shape of
+    # init_caches — see launch/dryrun.py)
+    return {
+        "token": jax.ShapeDtypeStruct((B, 1), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }
+
+
+def batch_like(cfg: ArchConfig, shape: ShapeConfig, key) -> dict:
+    """Concrete random batch matching input_specs (smoke tests / examples)."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for name, sds in specs.items():
+        kk = jax.random.fold_in(key, hash(name) % (2 ** 31))
+        if sds.dtype == jnp.int32 and name != "pos":
+            out[name] = jax.random.randint(kk, sds.shape, 0, cfg.vocab,
+                                           dtype=jnp.int32)
+        elif name == "pos":
+            out[name] = jnp.asarray(shape.seq_len - 1, jnp.int32)
+        else:
+            out[name] = jax.random.normal(kk, sds.shape, jnp.float32
+                                          ).astype(sds.dtype)
+    return out

@@ -1,0 +1,323 @@
+"""State-space / recurrent blocks: mLSTM + sLSTM (xLSTM) and Mamba2 (SSD).
+
+The shared engine is ``chunked_lin_attn`` — a chunkwise-parallel linear
+recurrence  S_t = a_t S_{t-1} + k_t (x) v_t,  y_t = S_t q_t  with per-step
+log-decay.  Chunk summaries are combined with ``lax.associative_scan`` (log
+depth, fully unrolled in HLO — no while loop, so compiled cost_analysis stays
+exact; see DESIGN.md section 7).  Decay gates are sigmoidal, so every
+exp(.) below is of a non-positive number — stable without an extra
+max-stabiliser (deviation from the xLSTM paper's exponential-gating
+stabiliser, documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dot, ninit, rms_norm
+
+Array = jax.Array
+
+
+def chunked_lin_attn(q, k, v, logf, *, chunk: int):
+    """q,k: (B,S,H,dk); v: (B,S,H,dv); logf: (B,S,H) (<= 0).
+    Returns y: (B,S,H,dv) with y_t = q_t . sum_{s<=t} (prod_{u in (s,t]} f_u) k_s (x) v_s.
+    The input gate belongs folded into v (or k) by the caller."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    qc = q.reshape(B, nc, chunk, H, dk)
+    kc = k.reshape(B, nc, chunk, H, dk)
+    vc = v.reshape(B, nc, chunk, H, dv)
+    lf = logf.reshape(B, nc, chunk, H)
+
+    cum = jnp.cumsum(lf, axis=2)                  # (B,nc,ch,H) inclusive
+    tot = cum[:, :, -1]                           # (B,nc,H)
+
+    # --- intra-chunk causal part -------------------------------------------
+    # w[t,s] = exp(cum_t - cum_s) for s < t, and exp(0)=1 for s == t... the
+    # recurrence applies decay *before* adding k_s v_s at step s, so the
+    # weight of s at t is prod_{u in (s, t]} f_u = exp(cum_t - cum_s).
+    att = jnp.einsum("bcthd,bcshd->bchts", qc, kc,
+                     preferred_element_type=jnp.float32)
+    cumT = cum.transpose(0, 1, 3, 2)                       # (B,nc,H,ch)
+    w = jnp.exp(jnp.clip(cumT[..., :, None] - cumT[..., None, :],
+                         -60.0, 0.0))                      # (B,nc,H,t,s)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    w = jnp.where(mask[None, None, None], w, 0.0)
+    intra = jnp.einsum("bchts,bcshd->bcthd", att * w, vc,
+                       preferred_element_type=jnp.float32)
+
+    # --- chunk summaries + associative scan across chunks ------------------
+    # state contribution of chunk c: sum_s exp(tot_c - cum_s) k_s (x) v_s
+    decay_to_end = jnp.exp(jnp.clip(tot[:, :, None] - cum, -60.0, 0.0))
+    Bst = jnp.einsum("bcsh,bcshd,bcshe->bchde", decay_to_end, kc, vc,
+                     preferred_element_type=jnp.float32)       # (B,nc,H,dk,dv)
+    A = jnp.exp(jnp.clip(tot, -60.0, 0.0))                     # (B,nc,H)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2[..., None, None] * b1 + b2
+
+    A_in, B_in = jax.lax.associative_scan(combine, (A, Bst), axis=1)
+    # exclusive: state entering chunk c = scanned state of chunks < c
+    S_in = jnp.concatenate(
+        [jnp.zeros_like(B_in[:, :1]), B_in[:, :-1]], axis=1)   # (B,nc,H,dk,dv)
+
+    cross = jnp.einsum("bcth,bcthd,bchde->bcthe",
+                       jnp.exp(jnp.clip(cum, -60.0, 0.0)), qc, S_in,
+                       preferred_element_type=jnp.float32)
+    y = (intra + cross).reshape(B, S, H, dv)
+    return y
+
+
+def lin_attn_step(state, q, k, v, f):
+    """One decode step of the same recurrence.
+    state: (B,H,dk,dv); q,k: (B,H,dk); v: (B,H,dv); f: (B,H) in (0,1)."""
+    state = f[..., None, None] * state + k[..., :, None] * v[..., None, :]
+    y = jnp.einsum("bhd,bhde->bhe", q, state)
+    return state, y
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix cell)
+# ===========================================================================
+
+def init_mlstm(key, d, n_heads, dtype):
+    di = 2 * d
+    ks = jax.random.split(key, 8)
+    s = d ** -0.5
+    si = di ** -0.5
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "up1": ninit(ks[0], (d, di), s, dtype),
+        "up2": ninit(ks[1], (d, di), s, dtype),
+        "wq": ninit(ks[2], (di, di), si, dtype),
+        "wk": ninit(ks[3], (di, di), si, dtype),
+        "wv": ninit(ks[4], (di, di), si, dtype),
+        "wi": ninit(ks[5], (di, n_heads), si, jnp.float32),
+        "wf": ninit(ks[6], (di, n_heads), si, jnp.float32),
+        "down": ninit(ks[7], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _mlstm_qkvif(p, u, n_heads):
+    B, S, di = u.shape
+    dh = di // n_heads
+    q = dot(u, p["wq"]).reshape(B, S, n_heads, dh)
+    k = dot(u, p["wk"]).reshape(B, S, n_heads, dh) * (dh ** -0.5)
+    v = dot(u, p["wv"]).reshape(B, S, n_heads, dh)
+    i = jax.nn.sigmoid(u.astype(jnp.float32) @ p["wi"])       # (B,S,H)
+    logf = jax.nn.log_sigmoid(u.astype(jnp.float32) @ p["wf"])
+    return q, k, v, i, logf
+
+
+def mlstm_block(p, x, ctx, *, n_heads: int, eps: float):
+    """Pre-norm mLSTM block: up-proj, matrix-LSTM cell, gated, down-proj."""
+    B, S, d = x.shape
+    xn = rms_norm(x, p["ln"], eps)
+    u = dot(xn, p["up1"])
+    gate = jax.nn.silu(dot(xn, p["up2"]).astype(jnp.float32))
+    q, k, v, i, logf = _mlstm_qkvif(p, u, n_heads)
+    dh = u.shape[-1] // n_heads
+    # fold input gate into v; append a ones column for the normalizer n_t
+    v_aug = jnp.concatenate(
+        [v * i[..., None].astype(v.dtype),
+         i[..., None].astype(v.dtype)], axis=-1)              # (B,S,H,dh+1)
+    y_aug = chunked_lin_attn(q.astype(jnp.float32), k.astype(jnp.float32),
+                             v_aug.astype(jnp.float32), logf,
+                             chunk=ctx.get("ssm_chunk", 256))
+    num, den = y_aug[..., :dh], y_aug[..., dh]
+    h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    h = (h.reshape(B, S, -1) * gate).astype(x.dtype)
+    return x + dot(h, p["down"])
+
+
+def init_mlstm_cache(n_layers, B, d, n_heads, dtype):
+    di = 2 * d
+    dh = di // n_heads
+    return {"state": jnp.zeros((n_layers, B, n_heads, dh, dh + 1), jnp.float32)}
+
+
+def mlstm_decode(p, cache_l, x, ctx, *, n_heads: int, eps: float):
+    B, _, d = x.shape
+    xn = rms_norm(x, p["ln"], eps)
+    u = dot(xn, p["up1"])
+    gate = jax.nn.silu(dot(xn, p["up2"]).astype(jnp.float32))
+    q, k, v, i, logf = _mlstm_qkvif(p, u, n_heads)
+    dh = u.shape[-1] // n_heads
+    v_aug = jnp.concatenate(
+        [v * i[..., None].astype(v.dtype), i[..., None].astype(v.dtype)], -1)
+    st, y = lin_attn_step(cache_l["state"], q[:, 0].astype(jnp.float32),
+                          k[:, 0].astype(jnp.float32),
+                          v_aug[:, 0].astype(jnp.float32),
+                          jnp.exp(logf[:, 0]))
+    num, den = y[..., :dh], y[..., dh]
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).reshape(B, 1, -1)
+    h = (h * gate).astype(x.dtype)
+    return x + dot(h, p["down"]), {"state": st}
+
+
+# ===========================================================================
+# sLSTM (scalar cell, block-diagonal recurrence; strictly sequential)
+# ===========================================================================
+
+def init_slstm(key, d, n_heads, dtype):
+    ks = jax.random.split(key, 9)
+    s = d ** -0.5
+    dh = d // n_heads
+    p = {"ln": jnp.zeros((d,), dtype)}
+    for n, kk in zip(("wz", "wi", "wf", "wo"), ks[:4]):
+        p[n] = ninit(kk, (d, d), s, dtype)
+    for n, kk in zip(("rz", "ri", "rf", "ro"), ks[4:8]):
+        p[n] = ninit(kk, (n_heads, dh, dh), dh ** -0.5, dtype)
+    p["down"] = ninit(ks[8], (d, d), s, dtype)
+    return p
+
+
+def _slstm_step(p, n_heads, carry, xt):
+    """carry: (c, n, h) each (B, d). xt: (B, d) pre-activations input."""
+    c, n, h = carry
+    B, d = h.shape
+    dh = d // n_heads
+    hh = h.reshape(B, n_heads, dh)
+
+    def rec(w):  # block-diagonal recurrent matmul
+        return jnp.einsum("bhd,hde->bhe", hh, w.astype(jnp.float32)
+                          ).reshape(B, d)
+
+    z = jnp.tanh(xt @ p["wz"].astype(jnp.float32) + rec(p["rz"]))
+    i = jax.nn.sigmoid(xt @ p["wi"].astype(jnp.float32) + rec(p["ri"]))
+    f = jax.nn.sigmoid(xt @ p["wf"].astype(jnp.float32) + rec(p["rf"]))
+    o = jax.nn.sigmoid(xt @ p["wo"].astype(jnp.float32) + rec(p["ro"]))
+    c = f * c + i * z
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return (c, n, h), h
+
+
+def slstm_block(p, x, ctx, *, n_heads: int, eps: float):
+    B, S, d = x.shape
+    xn = rms_norm(x, p["ln"], eps).astype(jnp.float32)
+    z0 = jnp.zeros((B, d), jnp.float32)
+    (_, _, _), hs = jax.lax.scan(
+        lambda c, xt: _slstm_step(p, n_heads, c, xt),
+        (z0, z0, z0), xn.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)
+    return x + dot(h, p["down"])
+
+
+def init_slstm_cache(n_layers, B, d):
+    z = jnp.zeros((n_layers, B, d), jnp.float32)
+    return {"c": z, "n": z, "h": z}
+
+
+def slstm_decode(p, cache_l, x, ctx, *, n_heads: int, eps: float):
+    xn = rms_norm(x, p["ln"], eps).astype(jnp.float32)[:, 0]
+    carry = (cache_l["c"], cache_l["n"], cache_l["h"])
+    (c, n, h), _ = _slstm_step(p, n_heads, carry, xn)
+    y = dot(h[:, None].astype(x.dtype), p["down"])
+    return x + y, {"c": c, "n": n, "h": h}
+
+
+# ===========================================================================
+# Mamba2 (SSD) block
+# ===========================================================================
+
+_CONV_W = 4
+
+
+def init_mamba2(key, d, d_state, dtype):
+    di = 2 * d
+    nh = di // 64          # head dim 64 (Mamba2 default)
+    ks = jax.random.split(key, 5)
+    s = d ** -0.5
+    conv_ch = di + 2 * d_state
+    return {
+        "ln": jnp.zeros((d,), dtype),
+        "in_proj": ninit(ks[0], (d, 2 * di + 2 * d_state + nh), s, dtype),
+        "conv": ninit(ks[1], (conv_ch, _CONV_W), conv_ch ** -0.5, jnp.float32),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": ninit(ks[4], (di, d), di ** -0.5, dtype),
+    }
+
+
+def _mamba_split(p, xn, d_state):
+    di = p["out_proj"].shape[0]
+    nh = di // 64
+    zxbcdt = dot(xn, p["in_proj"])
+    z, xin, Bc, Cc, dt_raw = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + d_state, 2 * di + 2 * d_state], axis=-1)
+    return z, xin, Bc, Cc, dt_raw, nh, di
+
+
+def _causal_conv(u, w):
+    """Depthwise causal conv, width _CONV_W. u: (B,S,C); w: (C,W)."""
+    pads = jnp.pad(u, ((0, 0), (_CONV_W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + u.shape[1]] * w[:, i].astype(u.dtype)
+              for i in range(_CONV_W))
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype)
+
+
+def mamba2_block(p, x, ctx, *, d_state: int, eps: float):
+    B, S, d = x.shape
+    xn = rms_norm(x, p["ln"], eps)
+    z, xin, Bc, Cc, dt_raw, nh, di = _mamba_split(p, xn, d_state)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_out = _causal_conv(conv_in, p["conv"])
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                          # (nh,)
+    logf = dt * A[None, None, :]                                      # <= 0
+    xh = xin.reshape(B, S, nh, 64).astype(jnp.float32)
+    k = jnp.broadcast_to(Bc[:, :, None, :], (B, S, nh, d_state)
+                         ).astype(jnp.float32)
+    q = jnp.broadcast_to(Cc[:, :, None, :], (B, S, nh, d_state)
+                         ).astype(jnp.float32)
+    v = xh * dt[..., None]
+    y = chunked_lin_attn(q, k, v, logf, chunk=ctx.get("ssm_chunk", 256))
+    y = y + xh * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return x + dot(y, p["out_proj"])
+
+
+def init_mamba2_cache(n_layers, B, d, d_state):
+    di = 2 * d
+    nh = di // 64
+    return {
+        "state": jnp.zeros((n_layers, B, nh, d_state, 64), jnp.float32),
+        "conv": jnp.zeros((n_layers, B, _CONV_W - 1, di + 2 * d_state),
+                          jnp.float32),
+    }
+
+
+def mamba2_decode(p, cache_l, x, ctx, *, d_state: int, eps: float):
+    B, _, d = x.shape
+    xn = rms_norm(x, p["ln"], eps)
+    z, xin, Bc, Cc, dt_raw, nh, di = _mamba_split(p, xn, d_state)
+    u = jnp.concatenate([xin, Bc, Cc], axis=-1)[:, 0]         # (B, C)
+    hist = jnp.concatenate([cache_l["conv"],
+                            u[:, None].astype(jnp.float32)], axis=1)
+    conv_out = jnp.sum(hist * p["conv"].T[None], axis=1)       # (B, C)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bc, Cc = jnp.split(conv_out, [di, di + d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)[:, 0] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    f = jnp.exp(dt * A[None, :])                               # (B,nh)
+    xh = xin.reshape(B, nh, 64)
+    k = jnp.broadcast_to(Bc[:, None, :], (B, nh, d_state))
+    q = jnp.broadcast_to(Cc[:, None, :], (B, nh, d_state))
+    v = xh * dt[..., None]
+    st, y = lin_attn_step(cache_l["state"], q, k, v, f)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return x + dot(y, p["out_proj"]), {"state": st, "conv": hist[:, 1:]}

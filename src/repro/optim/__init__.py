@@ -1,0 +1,17 @@
+"""Hand-rolled optimizers (no optax offline): AdamW (ZeRO-3-friendly — state
+inherits param shardings) and Adafactor (factored second moments, for the MoE
+giants whose fp32 Adam state would not fit 16 GB/chip at 256 chips)."""
+from .adamw import AdamW
+from .adafactor import Adafactor
+from .schedule import cosine_warmup
+
+__all__ = ["AdamW", "Adafactor", "cosine_warmup", "get_optimizer"]
+
+
+def get_optimizer(name: str, **kw):
+    if name == "adamw":
+        return AdamW(**kw)
+    if name == "adafactor":
+        kw.pop("master_weights", None)  # adamw-only knob
+        return Adafactor(**kw)
+    raise ValueError(name)

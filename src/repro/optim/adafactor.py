@@ -1,0 +1,73 @@
+"""Adafactor (Shazeer & Stern 2018): factored second moments, no first
+moment — O(n/d) optimizer state so the 0.8T-param llama4-maverick spec fits
+v5e HBM (see DESIGN.md section 5)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class Adafactor:
+    def __init__(self, lr: float | Callable = 1e-3, decay: float = 0.8,
+                 eps: float = 1e-30, clip_threshold: float = 1.0,
+                 weight_decay: float = 0.0):
+        self.lr, self.decay, self.eps = lr, decay, eps
+        self.clip_threshold = clip_threshold
+        self.weight_decay = weight_decay
+
+    def _factored(self, p) -> bool:
+        return p.ndim >= 2
+
+    def init(self, params):
+        def per(p):
+            if self._factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"step": jnp.zeros((), jnp.int32),
+                "fac": jax.tree.map(per, params,
+                                    is_leaf=lambda x: isinstance(x, jax.Array))}
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-self.decay)
+        lr = self._lr(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + self.eps
+            if self._factored(p):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True), self.eps))
+                cfac = jax.lax.rsqrt(vc)
+                u = g * rfac[..., None] * cfac[..., None, :]
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v)
+                news = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / self.clip_threshold)
+            pf = p.astype(jnp.float32)
+            new_p = pf - lr * (u + self.weight_decay * pf * (p.ndim >= 2))
+            return new_p.astype(p.dtype), news
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_s = treedef.flatten_up_to(state["fac"])
+        out = [upd(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+        new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+        new_fac = jax.tree.unflatten(treedef, [o[1] for o in out])
+        metrics = {"lr": jnp.asarray(lr)}
+        return new_p, {"step": step, "fac": new_fac}, metrics

@@ -1,0 +1,78 @@
+"""AdamW with fp32 moments (and optional fp32 master weights)."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamW:
+    def __init__(self, lr: float | Callable = 3e-4, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, master_weights: bool = False,
+                 grad_clip: float = 1.0):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.weight_decay = weight_decay
+        self.master_weights = master_weights
+        self.grad_clip = grad_clip
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {"step": jnp.zeros((), jnp.int32),
+                 "m": jax.tree.map(f32, params),
+                 "v": jax.tree.map(f32, params)}
+        if self.master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        lr = self._lr(step)
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g.astype(jnp.float32)))
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+        else:
+            gnorm = jnp.zeros(())
+            scale = 1.0
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v, master=None):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + self.eps)
+            base = master if master is not None else p.astype(jnp.float32)
+            new = base - lr * (u + self.weight_decay * base * (p.ndim >= 2))
+            return new, m, v
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state["m"])
+        leaves_v = treedef.flatten_up_to(state["v"])
+        leaves_master = (treedef.flatten_up_to(state["master"])
+                         if self.master_weights else [None] * len(leaves_p))
+        new_p, new_m, new_v, new_master = [], [], [], []
+        for p, g, m, v, mw in zip(leaves_p, leaves_g, leaves_m, leaves_v,
+                                  leaves_master):
+            np_, nm, nv = upd(p, g, m, v, mw)
+            new_p.append(np_.astype(p.dtype))
+            new_m.append(nm)
+            new_v.append(nv)
+            if self.master_weights:
+                new_master.append(np_)
+        new_state = {"step": step,
+                     "m": jax.tree.unflatten(treedef, new_m),
+                     "v": jax.tree.unflatten(treedef, new_v)}
+        if self.master_weights:
+            new_state["master"] = jax.tree.unflatten(treedef, new_master)
+        metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr)}
+        return jax.tree.unflatten(treedef, new_p), new_state, metrics

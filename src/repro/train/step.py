@@ -1,0 +1,152 @@
+"""train_step / prefill_step / serve_step builders.
+
+``make_train_step`` produces the jit-able update: microbatched gradient
+accumulation (lax.scan), per-layer remat, mixed precision (bf16 weights &
+activations, fp32 reductions), optimizer apply.  Gradient accumulation dtype
+is fp32 for dense archs and bf16 for the MoE giants (HBM budget —
+DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainPlan:
+    """Per-arch training knobs (chosen in configs or by heuristics)."""
+    optimizer: str = "adamw"           # adamw | adafactor
+    n_micro: int = 16                  # gradient-accumulation steps
+    grad_dtype: str = "float32"        # grad accumulation dtype
+    remat: bool = True
+    q_chunk: int = 2048
+    aux_weight: float = 0.01
+    grad_compress_levels: int = 0      # >0: clustered grad quantization
+
+
+def default_plan(cfg: ArchConfig, shape: ShapeConfig, dp_size: int) -> TrainPlan:
+    moe_giant = cfg.param_count() > 1e11
+    n_micro = max(1, shape.global_batch // dp_size)
+    return TrainPlan(
+        optimizer="adafactor" if moe_giant else "adamw",
+        n_micro=n_micro,
+        grad_dtype="bfloat16" if moe_giant else "float32",
+        q_chunk=min(2048, shape.seq_len),
+    )
+
+
+def _positions(cfg: ArchConfig, shape: ShapeConfig):
+    extra = cfg.n_patches or 0
+    return jnp.arange(shape.seq_len + extra)
+
+
+def make_loss_fn(model, cfg: ArchConfig, shape: ShapeConfig, plan: TrainPlan,
+                 act_spec: Optional[P], unroll: bool = False):
+    def loss_fn(params, mb):
+        ctx = model.make_ctx(_positions(cfg, shape), q_chunk=plan.q_chunk,
+                             act_spec=act_spec, chunk_scan=not unroll)
+        return model.loss(params, mb, ctx, remat=plan.remat,
+                          aux_weight=plan.aux_weight, unroll=unroll)
+    return loss_fn
+
+
+def make_train_step(model, optimizer, cfg: ArchConfig, shape: ShapeConfig,
+                    plan: TrainPlan, act_spec: Optional[P] = None,
+                    compress_fn: Optional[Callable] = None,
+                    grad_specs=None):
+    """-> train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "step"}; batch leaves have leading dim
+    global_batch, reshaped to (n_micro, micro, ...) inside.  When the model
+    supports ``loss_embedded`` the embed lookup is HOISTED out of the
+    gradient-accumulation scan: one gather per step instead of per
+    microbatch (the embed-grad scatter likewise happens once, outside).
+    """
+    loss_fn = make_loss_fn(model, cfg, shape, plan, act_spec)
+    gdtype = jnp.dtype(plan.grad_dtype)
+    hoist_embed = hasattr(model, "loss_embedded")
+
+    def train_step(state, batch):
+        params = state["params"]
+        n_micro = plan.n_micro
+
+        def reshape_mb(x):
+            return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+        ctx = model.make_ctx(_positions(cfg, shape), q_chunk=plan.q_chunk,
+                             act_spec=act_spec)
+        if hoist_embed:
+            x_all = model.embed_in(params, batch, ctx)
+            rest = {k: v for k, v in batch.items()
+                    if k not in ("tokens", "patches")}
+            mbs = (jax.tree.map(reshape_mb, x_all),
+                   jax.tree.map(reshape_mb, rest))
+
+            def micro_loss(p, mb):
+                x, rest_mb = mb
+                return model.loss_embedded(p, x, rest_mb, ctx,
+                                           remat=plan.remat,
+                                           aux_weight=plan.aux_weight)
+        else:
+            mbs = jax.tree.map(reshape_mb, batch)
+            micro_loss = loss_fn
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdtype), params)
+        if grad_specs is not None:
+            # grads reduce-scatter into their own layout (e.g. the embed
+            # table is replicated but its grad accumulator is sharded)
+            g0 = jax.tree.map(jax.lax.with_sharding_constraint, g0,
+                              grad_specs)
+
+        def acc(carry, mb):
+            gacc, lacc = carry
+            loss, g = jax.value_and_grad(micro_loss)(params, mb)
+            gacc = jax.tree.map(
+                lambda a, b: a + b.astype(gdtype), gacc, g)
+            return (gacc, lacc + loss), None
+
+        (gsum, lsum), _ = jax.lax.scan(acc, (g0, jnp.zeros(())), mbs)
+        grads = jax.tree.map(lambda g: (g / n_micro).astype(jnp.float32),
+                             gsum)
+        if compress_fn is not None:  # clustered gradient compression hook
+            grads = compress_fn(grads)
+        new_params, new_opt, om = optimizer.update(grads, state["opt"], params)
+        metrics = {"loss": lsum / n_micro, **om}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return train_step
+
+
+def make_prefill_step(model, cfg: ArchConfig, shape: ShapeConfig,
+                      act_spec: Optional[P] = None, q_chunk: int = 1024,
+                      unroll: bool = False):
+    """Full forward over the prompt (logits only; the engine layer handles
+    cache materialisation — for the dry-run cell the compute/memory envelope
+    of prefill is the forward pass)."""
+    def prefill_step(params, batch):
+        ctx = model.make_ctx(_positions(cfg, shape), q_chunk=q_chunk,
+                             act_spec=act_spec, chunk_scan=not unroll)
+        logits, _ = model.forward(params, batch, ctx, remat=False,
+                                  unroll=unroll, last_only=True)
+        return logits
+
+    return prefill_step
+
+
+def make_serve_step(model, cfg: ArchConfig, shape: ShapeConfig, kind: str,
+                    unroll: bool = False):
+    """One-token decode against a seq_len cache."""
+    def serve_step(params, caches, token, pos):
+        return model.decode_step(params, caches, token, pos,
+                                 ctx_extra={"cache_kind": kind},
+                                 unroll=unroll)
+
+    return serve_step

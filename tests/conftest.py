@@ -1,0 +1,17 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — tests run on the single real CPU
+# device; only launch/dryrun.py forces 512 placeholder devices.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def blob_data():
+    from repro.data.synthetic import blobs
+    pts, labels, centers = blobs(1200, n_clusters=4, dim=3, seed=1)
+    return pts, labels, centers

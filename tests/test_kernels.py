@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against the pure-jnp
+oracles in kernels/ref.py (interpret=True executes the kernel bodies on CPU).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import assign_argmin, centroid_update, pallas_assign_fn
+from repro.kernels.cluster_attn import cluster_attn_decode_pallas
+from repro.kernels.ref import (assign_argmin_ref, centroid_update_ref,
+                               cluster_attn_decode_ref)
+
+SHAPES = [(64, 4, 3), (257, 16, 7), (512, 128, 64), (100, 33, 17),
+          (1024, 2, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_assign_kernel_sweep(rng, m, d, k, dtype):
+    x = jnp.asarray(rng.normal(size=(m, d)), dtype)
+    c = jnp.asarray(rng.normal(size=(k, d)), dtype)
+    idx, dist = assign_argmin(x, c)
+    ridx, rdist = assign_argmin_ref(x, c)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    # argmin ties can differ under reordered arithmetic — check distances
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist),
+                               rtol=tol, atol=tol)
+    agree = (np.asarray(idx) == np.asarray(ridx)).mean()
+    assert agree > 0.99
+
+
+@pytest.mark.parametrize("m,d,k", SHAPES)
+def test_centroid_kernel_sweep(rng, m, d, k):
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, k, m), jnp.int32)
+    w = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    s, c = centroid_update(x, idx, w, k)
+    rs, rc = centroid_update_ref(x, idx, w, k)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(rs), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c), np.asarray(rc), rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("b,h,hkv,nc,dh,bn", [
+    (1, 4, 1, 64, 32, 32), (2, 8, 2, 300, 64, 128), (1, 16, 8, 128, 128, 512),
+])
+def test_cluster_attn_kernel_sweep(rng, b, h, hkv, nc, dh, bn):
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, hkv, nc, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, nc, dh)), jnp.float32)
+    cnt = jnp.asarray(rng.integers(0, 50, (b, hkv, nc)), jnp.float32)
+    out = cluster_attn_decode_pallas(q, kc, vc, cnt, dh ** -0.5, block_n=bn)
+    ref = jax.vmap(lambda a, b_, c, d: cluster_attn_decode_ref(
+        a, b_, c, d, dh ** -0.5))(q, kc, vc, cnt)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_cluster_attn_dead_centroids_ignored(rng):
+    b, h, hkv, nc, dh = 1, 2, 1, 32, 16
+    q = jnp.asarray(rng.normal(size=(b, h, dh)), jnp.float32)
+    kc = jnp.asarray(rng.normal(size=(b, hkv, nc, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, hkv, nc, dh)), jnp.float32)
+    cnt = jnp.ones((b, hkv, nc), jnp.float32).at[..., 16:].set(0.0)
+    out1 = cluster_attn_decode_pallas(q, kc, vc, cnt, 0.25, block_n=16)
+    # poison the dead region: result must not change
+    vc2 = vc.at[..., 16:, :].set(1e6)
+    out2 = cluster_attn_decode_pallas(q, kc, vc2, cnt, 0.25, block_n=16)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(4, 200), d=st.integers(1, 40), k=st.integers(1, 20),
+       seed=st.integers(0, 2 ** 30))
+def test_property_assign_kernel_any_shape(m, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    idx, dist = assign_argmin(x, c)
+    _, rdist = assign_argmin_ref(x, c)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist),
+                               rtol=1e-3, atol=1e-3)
+    assert int(jnp.max(idx)) < k
+
+
+def test_kmeans_with_pallas_assign(rng):
+    from repro.core import kmeans
+    x = jnp.asarray(rng.normal(size=(200, 5)), jnp.float32)
+    r1 = kmeans(x, 4, key=jax.random.PRNGKey(0))
+    r2 = kmeans(x, 4, key=jax.random.PRNGKey(0), assign_fn=pallas_assign_fn)
+    np.testing.assert_allclose(np.asarray(r1.centers), np.asarray(r2.centers),
+                               rtol=1e-3, atol=1e-3)

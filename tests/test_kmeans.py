@@ -1,0 +1,85 @@
+"""Unit + property tests for the core k-means."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (kmeans, kmeans_lloyd_step, landmark_init,
+                        pairwise_sqdist, sse, update_centers)
+
+
+def test_pairwise_sqdist_matches_numpy(rng):
+    x = rng.normal(size=(50, 7)).astype(np.float32)
+    c = rng.normal(size=(11, 7)).astype(np.float32)
+    d = np.asarray(pairwise_sqdist(jnp.asarray(x), jnp.asarray(c)))
+    ref = ((x[:, None] - c[None]) ** 2).sum(-1)
+    np.testing.assert_allclose(d, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_kmeans_recovers_separated_blobs(blob_data):
+    pts, labels, centers = blob_data
+    res = kmeans(jnp.asarray(pts), 4, iters=30, key=jax.random.PRNGKey(0))
+    # every true center has a found center within a small distance
+    found = np.asarray(res.centers)
+    for c in centers:
+        assert np.min(np.linalg.norm(found - c, axis=1)) < 0.5
+
+
+def test_weighted_kmeans_ignores_masked_points(rng):
+    x = rng.normal(size=(100, 2)).astype(np.float32)
+    x[50:] += 100.0  # junk points, masked away
+    w = np.concatenate([np.ones(50), np.zeros(50)]).astype(np.float32)
+    res = kmeans(jnp.asarray(x), 3, weights=jnp.asarray(w), iters=20,
+                 key=jax.random.PRNGKey(1))
+    assert np.abs(np.asarray(res.centers)).max() < 10.0
+
+
+def test_empty_cluster_keeps_old_center():
+    x = jnp.zeros((10, 2))
+    centers = jnp.asarray([[0.0, 0.0], [5.0, 5.0]])
+    idx, _ = (jnp.zeros(10, jnp.int32), None)
+    new, counts = update_centers(x, jnp.ones(10), idx, 2, centers)
+    np.testing.assert_allclose(np.asarray(new[1]), [5.0, 5.0])
+    assert float(counts[1]) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(8, 60), d=st.integers(1, 6), k=st.integers(1, 5),
+       seed=st.integers(0, 2 ** 30))
+def test_property_sse_monotone_under_lloyd(m, d, k, seed):
+    """Each Lloyd iteration may not increase the (weighted) SSE."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    w = jnp.ones((m,), jnp.float32)
+    centers = landmark_init(x, w, k)
+    prev = float(sse(x, centers))
+    for _ in range(4):
+        centers, _ = kmeans_lloyd_step(x, centers, w)
+        cur = float(sse(x, centers))
+        assert cur <= prev + 1e-3 + 1e-5 * abs(prev)
+        prev = cur
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 30), k=st.integers(1, 6))
+def test_property_centers_in_convex_hull_box(seed, k):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-3, 7, size=(40, 3)).astype(np.float32))
+    res = kmeans(x, k, iters=10, key=jax.random.PRNGKey(seed % 1000))
+    c = np.asarray(res.centers)
+    assert (c >= np.asarray(x).min(0) - 1e-4).all()
+    assert (c <= np.asarray(x).max(0) + 1e-4).all()
+
+
+def test_permutation_invariance(rng):
+    x = rng.normal(size=(64, 4)).astype(np.float32)
+    perm = rng.permutation(64)
+    r1 = kmeans(jnp.asarray(x), 4, iters=20, init="landmark")
+    r2 = kmeans(jnp.asarray(x[perm]), 4, iters=20, init="landmark")
+    # landmark init is permutation-invariant -> same centers (sorted)
+    c1 = np.asarray(r1.centers)
+    c2 = np.asarray(r2.centers)
+    c1 = c1[np.lexsort(c1.T)]
+    c2 = c2[np.lexsort(c2.T)]
+    np.testing.assert_allclose(c1, c2, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,80 @@
+"""Tests for the paper's two subclustering schemes (Algorithms 1 & 2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (equal_partition, feature_scale, gather_partitions,
+                        unequal_landmarks, unequal_partition, unscale)
+
+
+def test_feature_scale_roundtrip(rng):
+    x = jnp.asarray(rng.normal(3.0, 5.0, size=(40, 6)).astype(np.float32))
+    xs, params = feature_scale(x)
+    assert float(xs.min()) >= -1e-6 and float(xs.max()) <= 1 + 1e-6
+    np.testing.assert_allclose(np.asarray(unscale(xs, params)),
+                               np.asarray(x), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(10, 200), p=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 30))
+def test_property_equal_partition_covers_all_points(m, p, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, 3)).astype(np.float32))
+    part = equal_partition(x, p)
+    ids = np.asarray(part.indices)[np.asarray(part.mask)]
+    assert sorted(ids.tolist()) == list(range(m))  # exact cover, no dupes
+
+
+def test_equal_partition_is_sorted_chunking():
+    """Algorithm 1 semantics: partition i holds the i-th closest chunk to
+    the landmark L = per-attribute min."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(0, 1, size=(60, 2)).astype(np.float32))
+    part = equal_partition(x, 3)
+    L = np.asarray(x).min(0)
+    d = ((np.asarray(x) - L) ** 2).sum(-1)
+    for i in range(2):
+        cur = d[np.asarray(part.indices[i])[np.asarray(part.mask[i])]]
+        nxt = d[np.asarray(part.indices[i + 1])[np.asarray(part.mask[i + 1])]]
+        assert cur.max() <= nxt.min() + 1e-7
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(20, 200), p=st.integers(2, 8),
+       seed=st.integers(0, 2 ** 30))
+def test_property_unequal_partition_no_dupes_and_capacity(m, p, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, 2)).astype(np.float32))
+    part = unequal_partition(x, p, capacity_factor=2.0)
+    ids = np.asarray(part.indices)[np.asarray(part.mask)]
+    assert len(set(ids.tolist())) == len(ids)          # no duplicates
+    assert len(ids) + int(part.n_dropped) == m          # cover + drops
+
+
+def test_unequal_assignment_is_nearest_landmark():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.uniform(0, 1, size=(80, 3)).astype(np.float32))
+    p = 4
+    part = unequal_partition(x, p, capacity_factor=4.0)  # big cap: no drops
+    assert int(part.n_dropped) == 0
+    lms = np.asarray(unequal_landmarks(x, p))
+    xn = np.asarray(x)
+    expected = np.argmin(((xn[:, None] - lms[None]) ** 2).sum(-1), axis=1)
+    got = np.empty(80, np.int64)
+    idx = np.asarray(part.indices)
+    msk = np.asarray(part.mask)
+    for g in range(p):
+        got[idx[g][msk[g]]] = g
+    np.testing.assert_array_equal(got, expected)
+
+
+def test_gather_partitions_shapes(rng):
+    x = jnp.asarray(rng.normal(size=(30, 2)).astype(np.float32))
+    part = equal_partition(x, 4)
+    pts, w = gather_partitions(x, part)
+    assert pts.shape == (4, 8, 2)
+    assert w.shape == (4, 8)
+    assert float(w.sum()) == 30.0

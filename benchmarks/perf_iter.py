@@ -17,6 +17,7 @@ import pathlib
 
 import jax
 
+from repro import compat
 from repro.configs import SHAPES, get_config
 from repro.launch.mesh import make_production_mesh
 from repro.launch import dryrun as dr
@@ -78,7 +79,7 @@ def measure_train(cfg, shape, mesh, *, n_micro=None, act_model=False,
                                 P("data", "model", None), unroll=unroll)
             _sm.make_loss_fn = mlf
             dr.make_loss_fn = mlf
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             fa, aa, _ = dr.build_train_program(
                 cfg_a, micro_shape, mesh, n_micro=1, grad_only=True,
                 unroll=True, act_model=act_model)
@@ -120,7 +121,7 @@ def measure_decode(cfg, shape, mesh, *, window=None, compression=None,
     n_super = cfg.n_layers // layers_per_step
     cfg_a = dr._variant(cfg, 1, layers_per_step)
     cfg_b = dr._variant(cfg, 2, layers_per_step)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         fa, aa = dr.build_decode_program(cfg_a, sh, mesh, unroll=True)[:2]
         ca, _ = dr.lower_compile(fa, aa)
         A = cost_of_compiled(ca)

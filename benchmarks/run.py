@@ -20,6 +20,7 @@ MODULES = [
     ("table2_scaling", "benchmarks.bench_scaling"),
     ("table3_compression", "benchmarks.bench_compression"),
     ("cluster_attn", "benchmarks.bench_cluster_attn"),
+    ("stream", "benchmarks.bench_stream"),
     ("kernels", "benchmarks.bench_kernels"),
     ("grad_compress", "benchmarks.bench_grad_compress"),
 ]

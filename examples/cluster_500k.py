@@ -34,6 +34,7 @@ def main():
 
     import jax
     import jax.numpy as jnp
+    from repro import compat
     from repro.core import (make_distributed_sampled_kmeans, relative_error,
                             sampled_kmeans, standard_kmeans)
     from repro.data.synthetic import blobs
@@ -62,8 +63,7 @@ def main():
     ndev = jax.device_count()
     if ndev > 1:
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((ndev,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((ndev,), ("data",))
         xd = jax.device_put(x[: n - n % ndev], NamedSharding(mesh, P("data")))
         for merge in ("replicated", "distributed"):
             fn = make_distributed_sampled_kmeans(

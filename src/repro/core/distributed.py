@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+
 from .kmeans import AssignFn, assign_jnp, kmeans, update_centers
 from .subcluster import equal_partition, gather_partitions, unequal_partition
 
@@ -145,7 +147,9 @@ def make_distributed_sampled_kmeans(
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
             merged = kmeans(all_c, k, weights=all_w, iters=global_iters,
-                            key=jax.random.PRNGKey(17), assign_fn=assign_fn)
+                            key=jax.random.PRNGKey(17), assign_fn=assign_fn,
+                            restarts=4)  # same multi-seed guard as the
+                                         # batch pipeline's merge stage
             centers = merged.centers
         elif merge == "distributed":
             centers = _distributed_merge(lc, merge_w, k, global_iters,
@@ -163,7 +167,7 @@ def make_distributed_sampled_kmeans(
         total_sse = jax.lax.psum(local_sse, axis)
         return DistributedClusteringResult(centers, all_c, all_w, total_sse)
 
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         per_device,
         mesh=mesh,
         in_specs=(P(axis), P()),

@@ -2,6 +2,8 @@
 
 ``blobs``    — the paper's synthetic clustering workload (Gaussian clusters,
                "500 points per cluster" like the paper's 100k/250k/500k sets).
+``drifting_blobs`` — non-stationary chunked stream (random-walking cluster
+               centers) for the streaming engine (repro.stream).
 ``surrogate_iris`` / ``surrogate_seeds`` — statistically matched stand-ins
                for the paper's accuracy tables (150x4 / 210x7, 3 classes);
                the real datasets are not downloadable offline (documented in
@@ -30,6 +32,30 @@ def blobs(n_points: int, n_clusters: int | None = None, dim: int = 2,
     labels = np.repeat(np.arange(n_clusters), sizes)
     perm = rng.permutation(n_points)
     return pts[perm], labels[perm], centers.astype(np.float32)
+
+
+def drifting_blobs(n_chunks: int, chunk_size: int, n_clusters: int = 8,
+                   dim: int = 2, seed: int = 0, drift: float = 0.05,
+                   spread: float = 0.04):
+    """Non-stationary stream for the streaming engine benchmarks/tests:
+    Gaussian clusters whose centers random-walk by ``drift`` per chunk.
+
+    Returns ``(chunks, labels, center_traj)`` with shapes
+    (n_chunks, chunk_size, dim), (n_chunks, chunk_size) and
+    (n_chunks, n_clusters, dim) — ``center_traj[t]`` is the ground truth
+    *while chunk t was being emitted*.
+    """
+    rng = np.random.default_rng(seed)
+    centers = rng.uniform(0.0, 10.0, (n_clusters, dim))
+    chunks, labels, traj = [], [], []
+    for _ in range(n_chunks):
+        centers = centers + rng.normal(0.0, drift, centers.shape)
+        ids = rng.integers(0, n_clusters, chunk_size)
+        pts = centers[ids] + rng.normal(0.0, spread * 10.0, (chunk_size, dim))
+        chunks.append(pts.astype(np.float32))
+        labels.append(ids)
+        traj.append(centers.astype(np.float32).copy())
+    return np.stack(chunks), np.stack(labels), np.stack(traj)
 
 
 def surrogate_iris(seed: int = 0):

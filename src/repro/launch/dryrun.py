@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.configs import (ARCH_IDS, SHAPES, ArchConfig, ShapeConfig,
                            get_config, shape_applicable)
 from repro.launch.mesh import make_production_mesh
@@ -224,7 +225,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, *,
                  "active_params": cfg.active_param_count(),
                  "chips": int(mesh.devices.size)}
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         # ---- full-program compile: THE dry-run gate + memory analysis ----
         def _full(act_model):
             if shape.kind == "train":

@@ -8,20 +8,17 @@ from __future__ import annotations
 
 import jax
 
+from repro import compat
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """16x16 = 256 chips/pod ("data","model"); 2 pods add a leading "pod"
     axis used only for data parallelism (gradient all-reduce over DCN)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_host_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
     """Small mesh over however many (host) devices exist — tests/examples."""
-    axes = ("data", "model")
-    return jax.make_mesh(
-        (n_data, n_model), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((n_data, n_model), ("data", "model"))

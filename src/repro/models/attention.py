@@ -173,6 +173,14 @@ def _cache_attend(q, kc, vc, valid):
 # Sliding-window decode (ring buffer)
 # ---------------------------------------------------------------------------
 
+def window_valid_mask(slot_pos: Array, pos: Array, window: int) -> Array:
+    """Liveness of ring-buffer slots: written (>= 0), not from the future,
+    and within the last ``window`` positions of ``pos`` (the position of the
+    most recently written token).  Shared by the window/clustered decode
+    paths and the streaming KV refresh (repro.stream.kv)."""
+    return (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+
+
 def init_window_cache(n_layers, B, window, dims: AttnDims, dtype):
     kv, dh = dims.n_kv, dims.dh
     z = jnp.zeros((n_layers, B, kv, window, dh), dtype)
@@ -193,7 +201,7 @@ def attention_decode_window(p, cache_l, x, dims: AttnDims, ctx, window: int):
         cache_l["v"], v_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
     slot_pos = jax.lax.dynamic_update_slice(
         cache_l["slot_pos"], pos[None].astype(jnp.int32), (slot,))
-    valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+    valid = window_valid_mask(slot_pos, pos, window)
     out = _cache_attend(q, kc, vc, valid)
     return (dot(out.reshape(B, 1, h * dh), p["wo"]),
             {"k": kc, "v": vc, "slot_pos": slot_pos})
@@ -237,7 +245,7 @@ def attention_decode_clustered(p, cache_l, x, dims: AttnDims, ctx):
         cache_l["wv"], v_new.transpose(0, 2, 1, 3), (0, 0, slot, 0))
     slot_pos = jax.lax.dynamic_update_slice(
         cache_l["slot_pos"], pos[None].astype(jnp.int32), (slot,))
-    w_valid = (slot_pos >= 0) & (slot_pos <= pos) & (pos - slot_pos < window)
+    w_valid = window_valid_mask(slot_pos, pos, window)
 
     # exact-window logits
     lw = jnp.einsum("bkgd,bksd->bkgs", qg, wk,

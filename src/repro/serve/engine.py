@@ -3,13 +3,17 @@ recompression (the paper's pipeline applied online).
 
 Decode runs against [centroid cache ‖ exact window].  Every
 ``recompress_every`` tokens the window contents are folded into the centroid
-set by re-running per-chunk k-means over [old centroids (weighted) ‖ window
-keys] — i.e. the paper's merge stage, weighted by member counts, executed
-incrementally.  This keeps the cache size O(S/c + W) forever.
+set by :func:`repro.stream.kv.refresh_layer_cache` — one warm-started
+weighted k-means over [old centroids (weighted by member counts) ‖ window
+keys], i.e. the paper's merge stage executed incrementally (the streaming
+engine's coreset fold, with the centroid set as the coreset).  The window is
+then marked empty and refills; the cache stays O(S_0/c + W) forever while
+the centroids track the whole history.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -19,12 +23,14 @@ import numpy as np
 from repro.configs import ArchConfig, ShapeConfig
 from repro.models.attention import compress_kv_cache
 from repro.models.registry import build_model, cache_kind
+from repro.stream.kv import refresh_layer_cache
 
 
 @dataclasses.dataclass
 class ServeConfig:
     max_tokens: int = 32
     recompress_every: int = 0       # 0 = never (window ring handles recency)
+    recompress_iters: int = 4       # Lloyd iters per incremental refresh
     temperature: float = 0.0        # 0 = greedy
 
 
@@ -39,6 +45,36 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, t, pos: self.model.decode_step(
                 p, c, t, pos, ctx_extra={"cache_kind": self.kind}))
+        every = self.scfg.recompress_every
+        if (self.kind == "clustered" and every > 0
+                and every > shape.cluster_window):
+            # the ring would overwrite tokens before a refresh ever folds
+            # them into the centroids — they'd silently vanish from the cache
+            raise ValueError(
+                f"recompress_every={every} exceeds cluster_window="
+                f"{shape.cluster_window}: tokens would be evicted unfolded")
+        self._refresh = jax.jit(functools.partial(
+            refresh_layer_cache, iters=self.scfg.recompress_iters))
+
+    def _refresh_tree(self, c, last):
+        """Recurse through a cache dict refreshing every clustered sub-cache
+        — handles both the flat dense layout ({"blocks": {kc,...}}) and the
+        nested gemma/zamba layouts ({"super": {"local":…, "global": {kc,…}}});
+        the stacked leaf shapes are identical either way."""
+        if isinstance(c, dict):
+            if "kc" in c:
+                return self._refresh(c, last)
+            return {k: self._refresh_tree(v, last) for k, v in c.items()}
+        return c
+
+    def _maybe_recompress(self, caches, pos: int):
+        """Fold each clustered group's window into its centroids when the
+        position hits the recompression cadence (no-op otherwise)."""
+        every = self.scfg.recompress_every
+        if (self.kind != "clustered" or every <= 0 or pos == 0
+                or pos % every != 0):
+            return caches
+        return self._refresh_tree(caches, jnp.asarray(pos - 1, jnp.int32))
 
     # -- prefill -----------------------------------------------------------
     def prefill(self, tokens: jax.Array):
@@ -52,6 +88,7 @@ class ServeEngine:
             logits, caches = self._decode(self.params, caches,
                                           tokens[:, i:i + 1],
                                           jnp.asarray(i, jnp.int32))
+            caches = self._maybe_recompress(caches, i + 1)
         return caches, logits, S
 
     # -- decode loop ---------------------------------------------------------
@@ -75,6 +112,7 @@ class ServeEngine:
             logits, caches = self._decode(self.params, caches, nxt,
                                           jnp.asarray(pos, jnp.int32))
             pos += 1
+            caches = self._maybe_recompress(caches, pos)
         return np.concatenate(out, axis=1)
 
 

@@ -1,0 +1,22 @@
+"""Streaming sampled clustering — the paper's pipeline run continuously.
+
+Public API:
+  StreamConfig, StreamState, StreamingClusterer — online engine
+      (init / update / query, pure-functional jit-able state)
+  summarize_chunk, fold_coreset, reseed_dead_centers, fold_and_merge
+      — the engine's stages, exposed for composition
+  make_sharded_update — shard_map variant along the ``data`` mesh axis
+  refresh_clustered_cache, refresh_layer_cache — incremental clustered-KV
+      decode-cache refresh (used by repro.serve.engine)
+"""
+from .engine import (StreamConfig, StreamState, StreamingClusterer,
+                     fold_and_merge, fold_coreset, reseed_dead_centers,
+                     summarize_chunk)
+from .distributed import make_sharded_update
+from .kv import refresh_clustered_cache, refresh_layer_cache
+
+__all__ = [
+    "StreamConfig", "StreamState", "StreamingClusterer", "summarize_chunk",
+    "fold_coreset", "reseed_dead_centers", "fold_and_merge",
+    "make_sharded_update", "refresh_clustered_cache", "refresh_layer_cache",
+]

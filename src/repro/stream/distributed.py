@@ -1,0 +1,50 @@
+"""shard_map wrapper for the streaming engine (chunk sharded along ``data``).
+
+Same decomposition as :mod:`repro.core.distributed`: the local stage runs
+per device on its shard of the chunk, the weighted local centers are
+all_gathered, and the (small) coreset fold + warm-started merge runs
+replicated — every device holds the identical ``StreamState``.  Collective
+traffic per update is O(n_sub_total * k_local * d), independent of the
+chunk size, so the stream scales with the mesh exactly like the batch path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+
+from .engine import StreamingClusterer, StreamState, fold_and_merge, summarize_chunk
+
+
+def make_sharded_update(clusterer: StreamingClusterer,
+                        mesh: jax.sharding.Mesh, *, axis: str = "data"):
+    """Build ``fn(state, chunk) -> state`` where ``chunk`` is (C, d) sharded
+    along ``axis`` and the state is replicated.  ``cfg.n_sub`` counts
+    partitions *per device*; each device feature-scales its own shard (the
+    partition landmarks are shard-local, mirroring the chunk-local scaling
+    of the single-device path)."""
+    cfg = clusterer.cfg
+    assign_fn = clusterer.assign_fn
+
+    def per_device(state: StreamState, chunk: jax.Array) -> StreamState:
+        key_local, key_merge, key_next = jax.random.split(state.key, 3)
+        my = jax.lax.axis_index(axis)
+        lc, lw = summarize_chunk(chunk, cfg,
+                                 jax.random.fold_in(key_local, my), assign_fn)
+        all_c = jax.lax.all_gather(lc, axis, tiled=True)
+        all_w = jax.lax.all_gather(lw, axis, tiled=True)
+        n_pts = jax.lax.psum(jnp.asarray(chunk.shape[0], jnp.float32), axis)
+        new = fold_and_merge(state, all_c, all_w, n_pts, cfg, key_merge,
+                             assign_fn)
+        return new._replace(key=key_next)
+
+    mapped = compat.shard_map(
+        per_device,
+        mesh=mesh,
+        in_specs=(P(), P(axis)),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(mapped)

@@ -1,0 +1,213 @@
+"""Online sampled clustering: the paper's compression loop, run forever.
+
+The batch pipeline (:func:`repro.core.pipeline.sampled_kmeans`) runs
+partition -> local k-means -> merge exactly once.  A data stream wants the
+same two levels but *incrementally*:
+
+  1. each fixed-size chunk is partitioned and summarised by the existing
+     ``local_stage`` machinery (the paper's "device part", unchanged);
+  2. the resulting weighted local centers are folded into a bounded,
+     exponentially-decayed **coreset buffer** — the paper's "sampled
+     representatives", now persistent.  Scalable K-Means++ (Bahmani et al.)
+     justifies the move: oversampled weighted representatives preserve
+     solution quality, so merging representatives-of-representatives does
+     too;
+  3. the k global centers are refreshed by a warm-started weighted k-means
+     over the coreset (``init`` = previous centers), which is the paper's
+     merge stage executed as a mini-batch update.
+
+Drift handling: coreset weights decay by ``decay`` per update, so stale
+regions fade; global centers whose coreset support hits zero are reseeded
+from the heaviest still-uncovered coreset points (greedy farthest-point on
+``weight * min_dist``, the same construction as the distributed merge init).
+
+Everything is static-shape and pure: ``StreamState`` is a NamedTuple,
+``update`` is jit-able, and the chunk summarisation + coreset fold split
+lets :func:`make_sharded_update` run the local stage under shard_map along
+the existing ``data`` axis (see :mod:`repro.core.distributed`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import AssignFn, assign_jnp, kmeans, pairwise_sqdist
+from repro.core.metrics import sse as sse_fn
+from repro.core.pipeline import local_stage
+from repro.core.subcluster import (equal_partition, feature_scale,
+                                   gather_partitions, unequal_partition,
+                                   unscale)
+
+Array = jax.Array
+
+
+class StreamState(NamedTuple):
+    """Pure-functional clusterer state (all fields static-shape)."""
+    centers: Array     # (k, d) current global centers, input space
+    coreset: Array     # (buffer_size, d) weighted representatives
+    coreset_w: Array   # (buffer_size,) decayed weights; 0 = empty slot
+    n_seen: Array      # () float32 — raw points ingested so far
+    step: Array        # () int32 — update counter
+    key: Array         # PRNG key threaded through updates
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Hyper-parameters of the streaming engine (hashable -> jit-static)."""
+    k: int
+    n_sub: int = 8                 # partitions per chunk (paper's P)
+    compression: int = 5           # paper's c: N-point partition -> N/c reps
+    scheme: str = "equal"          # "equal" (Algo 1) | "unequal" (Algo 2)
+    capacity_factor: float = 2.0   # Algo 2 capacity bound
+    local_iters: int = 8           # Lloyd iters per partition
+    merge_iters: int = 8           # warm-started Lloyd iters per update
+    buffer_size: int = 1024        # coreset slots
+    decay: float = 0.97            # per-update weight multiplier
+    reseed_threshold: float = 1e-6 # coreset support below this = dead center
+    init_mode: str = "kmeans++"    # local-stage init
+
+
+def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
+                    assign_fn: AssignFn = assign_jnp) -> tuple[Array, Array]:
+    """Chunk -> (weighted local centers, weights): the paper's local stage.
+
+    The chunk is feature-scaled on its own min/max (the partition landmarks
+    are chunk-local, exactly as each batch invocation scales on its input),
+    then partitioned and vmap-k-means'd; centers come back in input space.
+    """
+    xs, params = feature_scale(chunk)
+    if cfg.scheme == "equal":
+        part = equal_partition(xs, cfg.n_sub)
+    elif cfg.scheme == "unequal":
+        part = unequal_partition(xs, cfg.n_sub,
+                                 capacity_factor=cfg.capacity_factor)
+    else:
+        raise ValueError(f"unknown scheme {cfg.scheme!r}")
+    parts, part_w = gather_partitions(xs, part)
+    k_local = max(1, parts.shape[1] // cfg.compression)
+    local = local_stage(parts, part_w, k_local, iters=cfg.local_iters,
+                        key=key, init=cfg.init_mode, assign_fn=assign_fn)
+    d = chunk.shape[-1]
+    centers = unscale(local.centers.reshape(-1, d), params)
+    weights = local.counts.reshape(-1)
+    return centers, weights
+
+
+def fold_coreset(coreset: Array, coreset_w: Array, new_pts: Array,
+                 new_w: Array, decay: float) -> tuple[Array, Array]:
+    """Decay the buffer, append the fresh representatives, evict back down
+    to ``buffer_size`` by keeping the heaviest entries (static top_k)."""
+    buffer = coreset.shape[0]
+    all_pts = jnp.concatenate([coreset, new_pts], axis=0)
+    all_w = jnp.concatenate([coreset_w * decay, new_w], axis=0)
+    top_w, top_i = jax.lax.top_k(all_w, buffer)
+    return all_pts[top_i], top_w
+
+
+def reseed_dead_centers(centers: Array, coreset: Array, coreset_w: Array,
+                        threshold: float) -> Array:
+    """Replace centers with ~zero coreset support by greedy farthest-point
+    picks over the coreset, scored by ``weight * min_dist`` (heavy, badly
+    covered representatives first).  Alive centers are untouched; the greedy
+    loop spreads the reseeds so k simultaneous deaths (e.g. the cold start
+    from an all-zero init state) land on k distinct regions."""
+    k = centers.shape[0]
+    d2 = pairwise_sqdist(coreset, centers)  # one matrix serves both uses
+    idx = jnp.argmin(d2, axis=1)
+    support = (jax.nn.one_hot(idx, k, dtype=coreset.dtype)
+               * coreset_w[:, None]).sum(axis=0)
+    dead = support <= threshold
+
+    big = jnp.asarray(jnp.finfo(coreset.dtype).max, coreset.dtype)
+    min_d = jnp.min(jnp.where(dead[None, :], big, d2), axis=1)
+    min_d = jnp.where(jnp.all(dead), 1.0, min_d)  # no live center at all
+
+    def body(i, carry):
+        cs, md = carry
+        pick = coreset[jnp.argmax(coreset_w * md)]
+        new_c = jnp.where(dead[i], pick, cs[i])
+        cs = cs.at[i].set(new_c)
+        md = jnp.minimum(md, jnp.sum((coreset - new_c) ** 2, axis=-1))
+        return cs, md
+
+    centers, _ = jax.lax.fori_loop(0, k, body, (centers, min_d))
+    return centers
+
+
+def fold_and_merge(state: StreamState, new_pts: Array, new_w: Array,
+                   n_new_points: Array, cfg: StreamConfig,
+                   key: Array, assign_fn: AssignFn = assign_jnp
+                   ) -> StreamState:
+    """Global half of an update: coreset fold + reseed + warm-started merge.
+    Runs replicated under shard_map (inputs already gathered)."""
+    coreset, coreset_w = fold_coreset(state.coreset, state.coreset_w,
+                                      new_pts, new_w, cfg.decay)
+    warm = reseed_dead_centers(state.centers, coreset, coreset_w,
+                               cfg.reseed_threshold)
+    merged = kmeans(coreset, cfg.k, weights=coreset_w,
+                    iters=cfg.merge_iters, key=key, init=warm,
+                    assign_fn=assign_fn)
+    return StreamState(
+        centers=merged.centers,
+        coreset=coreset,
+        coreset_w=coreset_w,
+        n_seen=state.n_seen + n_new_points.astype(state.n_seen.dtype),
+        step=state.step + 1,
+        key=state.key,
+    )
+
+
+class StreamingClusterer:
+    """Online sampled-k-means engine over fixed-size chunks.
+
+    >>> sc = StreamingClusterer(StreamConfig(k=8))
+    >>> state = sc.init(dim=2)
+    >>> for chunk in chunks:                    # (chunk_size, 2) each
+    ...     state = sc.update(state, chunk)     # jit-compiled
+    >>> assignment, point_sse = sc.query(state, x)
+
+    ``init`` starts from all-zero centers and an empty coreset; the first
+    ``update`` detects the k unsupported centers and reseeds them from the
+    fresh chunk's representatives, so no separate warm-up path exists.
+    ``update`` recompiles per distinct chunk shape — feed fixed-size chunks.
+    """
+
+    def __init__(self, cfg: StreamConfig, *,
+                 assign_fn: AssignFn = assign_jnp, jit: bool = True):
+        self.cfg = cfg
+        self.assign_fn = assign_fn
+        wrap = jax.jit if jit else (lambda f: f)
+        self.update = wrap(self._update)
+        self.query = wrap(self._query)
+
+    # -- state ------------------------------------------------------------
+    def init(self, dim: int, key: Optional[Array] = None,
+             dtype=jnp.float32) -> StreamState:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        cfg = self.cfg
+        return StreamState(
+            centers=jnp.zeros((cfg.k, dim), dtype),
+            coreset=jnp.zeros((cfg.buffer_size, dim), dtype),
+            coreset_w=jnp.zeros((cfg.buffer_size,), dtype),
+            n_seen=jnp.zeros((), jnp.float32),
+            step=jnp.zeros((), jnp.int32),
+            key=key,
+        )
+
+    # -- pure update / query ----------------------------------------------
+    def _update(self, state: StreamState, chunk: Array) -> StreamState:
+        key_local, key_merge, key_next = jax.random.split(state.key, 3)
+        lc, lw = summarize_chunk(chunk, self.cfg, key_local, self.assign_fn)
+        state = fold_and_merge(state, lc, lw,
+                               jnp.asarray(chunk.shape[0], jnp.float32),
+                               self.cfg, key_merge, self.assign_fn)
+        return state._replace(key=key_next)
+
+    def _query(self, state: StreamState, x: Array) -> tuple[Array, Array]:
+        """Assign points to the current centers; returns (assignment, sse)."""
+        idx, _ = self.assign_fn(x, state.centers)
+        return idx, sse_fn(x, state.centers)

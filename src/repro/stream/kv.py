@@ -1,0 +1,94 @@
+"""Incremental clustered-KV cache refresh — the streaming merge applied to
+decode attention.
+
+The clustered decode cache (:mod:`repro.models.attention`) holds
+``n_centroids`` weighted key/value centroids plus an exact recent window.
+The offline path rebuilds the centroids from a full cache with
+``compress_kv_cache``; here we instead *fold the window into the existing
+centroids*: one warm-started weighted k-means over
+
+    [old centroids (weight = member counts)  ‖  window keys (weight = 1)]
+
+with ``init`` = the old centroids — exactly the streaming engine's
+coreset-merge step, with the centroid set playing the coreset.  Value
+centroids follow as assignment-weighted means, counts accumulate, and the
+window is marked empty.  Cost per refresh is O((n + W) * n * d * iters)
+regardless of how long the sequence has run — the cache stays O(S_0/c + W)
+forever while tracking the full history.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import kmeans, update_centers
+
+Array = jax.Array
+
+
+def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
+                            wk: Array, wv: Array, w_valid: Array,
+                            *, iters: int = 4, key: Array | None = None
+                            ) -> tuple[Array, Array, Array]:
+    """Fold window keys/values into the centroid set.
+
+    kc, vc:  (..., n, dh) key / value centroids
+    counts:  (..., n) member counts (0 = empty centroid slot)
+    wk, wv:  (..., W, dh) window ring contents
+    w_valid: (..., W) 1.0 for live window slots, 0.0 otherwise
+
+    Returns updated (kc, vc, counts); total mass is conserved
+    (sum(counts') = sum(counts) + sum(w_valid)).  Empty centroid slots have
+    zero weight, so they act as free capacity: the warm-started Lloyd can
+    only move them onto window keys (a zero-weight point at its old
+    position attracts nothing it keeps).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n, dh = kc.shape[-2:]
+    W = wk.shape[-2]
+    batch = kc.shape[:-2]
+
+    kc_f = kc.reshape(-1, n, dh).astype(jnp.float32)
+    vc_f = vc.reshape(-1, n, dh).astype(jnp.float32)
+    cnt_f = counts.reshape(-1, n).astype(jnp.float32)
+    wk_f = wk.reshape(-1, W, dh).astype(jnp.float32)
+    wv_f = wv.reshape(-1, W, dh).astype(jnp.float32)
+    val_f = jnp.broadcast_to(w_valid.astype(jnp.float32),
+                             batch + (W,)).reshape(-1, W)
+    keys = jax.random.split(key, kc_f.shape[0])
+
+    def one(kc1, vc1, cnt1, wk1, wv1, val1, kk):
+        pts = jnp.concatenate([kc1, wk1], axis=0)
+        vals = jnp.concatenate([vc1, wv1], axis=0)
+        w = jnp.concatenate([cnt1, val1], axis=0)
+        res = kmeans(pts, n, weights=w, iters=iters, key=kk, init=kc1)
+        new_vc, new_cnt = update_centers(vals, w, res.assignment, n, vc1)
+        return res.centers, new_vc, new_cnt
+
+    nkc, nvc, ncnt = jax.vmap(one)(kc_f, vc_f, cnt_f, wk_f, wv_f, val_f, keys)
+    return (nkc.reshape(kc.shape).astype(kc.dtype),
+            nvc.reshape(vc.shape).astype(vc.dtype),
+            ncnt.reshape(counts.shape).astype(counts.dtype))
+
+
+def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
+                        key: Array | None = None) -> dict:
+    """Refresh a stacked clustered cache dict as built by
+    ``init_clustered_cache``: kc/vc (L, B, kv, n, dh), counts (L, B, kv, n),
+    wk/wv (L, B, kv, W, dh), slot_pos (L, W).  ``pos`` is the *position of
+    the most recently decoded token* (i.e. count - 1), matching the ``pos``
+    the decode step wrote into the ring.  Returns a new cache with the
+    window absorbed and ``slot_pos`` reset."""
+    from repro.models.attention import window_valid_mask
+
+    window = cache["wk"].shape[3]
+    valid = window_valid_mask(cache["slot_pos"], pos, window)   # (L, W)
+    # broadcast (L, W) -> (L, B, kv, W)
+    v4 = valid[:, None, None, :].astype(jnp.float32)
+    v4 = jnp.broadcast_to(v4, cache["counts"].shape[:3] + (window,))
+    kc, vc, counts = refresh_clustered_cache(
+        cache["kc"], cache["vc"], cache["counts"],
+        cache["wk"], cache["wv"], v4, iters=iters, key=key)
+    return dict(cache, kc=kc, vc=vc, counts=counts,
+                slot_pos=jnp.full_like(cache["slot_pos"], -1))

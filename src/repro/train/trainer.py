@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.ckpt import checkpoint as ckpt
 from repro.configs import ArchConfig, ShapeConfig
 from repro.data.synthetic import token_stream
@@ -91,7 +92,7 @@ class Trainer:
 
     # -- state ---------------------------------------------------------------
     def init_state(self):
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             params = jax.jit(self.model.init, out_shardings=self.p_sh)(
                 jax.random.PRNGKey(self.tcfg.seed))
             opt = jax.jit(self.optimizer.init, out_shardings=self.o_sh)(params)
@@ -112,7 +113,7 @@ class Trainer:
         state, start = self.restore_or_init()
         times = []
         history = []
-        with jax.set_mesh(self.mesh):
+        with compat.set_mesh(self.mesh):
             for step in range(start, tc.steps):
                 batch = {k: jax.device_put(v, self.b_sh[k])
                          for k, v in self.batch_fn(step).items()}

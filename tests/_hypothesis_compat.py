@@ -1,0 +1,89 @@
+"""``hypothesis`` import shim so the property tests run offline.
+
+When hypothesis is installed (the ``test`` extra), it is re-exported
+unchanged.  When it is not — e.g. a network-less container — ``@given``
+degrades to a *fixed-examples* substitute: each strategy draws a small,
+deterministic batch of pseudo-random examples (seeded from the test name),
+so the property tests still execute and still catch gross regressions, just
+without hypothesis' adversarial search or shrinking.
+
+Usage in test modules (instead of ``from hypothesis import ...``)::
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import zlib
+
+    import numpy as np
+
+    # Keep the fallback cheap: the real hypothesis runs up to
+    # settings(max_examples=...) cases; offline we cap at a handful.
+    _FALLBACK_EXAMPLES = 5
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        """The (small) strategy surface this test-suite uses."""
+
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(
+                lambda rng: elements[int(rng.integers(len(elements)))])
+
+    st = _Strategies()
+
+    def given(**strategies):
+        def decorate(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _FALLBACK_EXAMPLES)
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((base, i))
+                    drawn = {name: s.draw(rng)
+                             for name, s in strategies.items()}
+                    fn(*args, **drawn, **kwargs)
+
+            # pytest resolves fixtures from inspect.signature, which follows
+            # __wrapped__ back to fn — whose params are the strategy names,
+            # not fixtures.  Drop the link so pytest sees (*args, **kwargs).
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def settings(max_examples=None, deadline=None, **_kw):
+        del deadline
+
+        def decorate(fn):
+            if max_examples is not None:
+                fn._max_examples = min(max_examples, _FALLBACK_EXAMPLES)
+            return fn
+
+        return decorate

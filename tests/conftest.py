@@ -3,6 +3,10 @@ import pytest
 
 # NOTE: no XLA_FLAGS here on purpose — tests run on the single real CPU
 # device; only launch/dryrun.py forces 512 placeholder devices.
+#
+# Heavy end-to-end cases (subprocess dryruns, 100k-point sweeps, trainer
+# round-trips) are marked @pytest.mark.slow and deselected by default via
+# addopts in pyproject.toml; run them with `-m slow` (or `-m ""` for all).
 
 
 @pytest.fixture(scope="session")
@@ -13,5 +17,7 @@ def rng():
 @pytest.fixture(scope="session")
 def blob_data():
     from repro.data.synthetic import blobs
-    pts, labels, centers = blobs(1200, n_clusters=4, dim=3, seed=1)
+    # sized for the tier-1 loop: big enough for 4 clearly separated
+    # clusters, small enough that every consumer stays sub-second
+    pts, labels, centers = blobs(800, n_clusters=4, dim=3, seed=1)
     return pts, labels, centers

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import assign_argmin, centroid_update, pallas_assign_fn
 from repro.kernels.cluster_attn import cluster_attn_decode_pallas

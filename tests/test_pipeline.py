@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.core import (relative_error, sampled_kmeans, standard_kmeans, sse)
 from repro.data.synthetic import blobs
 
@@ -67,7 +68,8 @@ from repro.core import make_distributed_sampled_kmeans, standard_kmeans
 from repro.data.synthetic import blobs
 pts, _, _ = blobs(4096, n_clusters=4, dim=2, seed=5)
 x = jnp.asarray(pts)
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro import compat
+mesh = compat.make_mesh((8,), ("data",))
 xd = jax.device_put(x, NamedSharding(mesh, P("data")))
 full = standard_kmeans(x, 4, iters=30)
 for merge in ("replicated", "distributed"):
@@ -85,6 +87,26 @@ print("DIST_OK")
 """
 
 
+@pytest.mark.parametrize("merge", ["replicated", "distributed"])
+def test_distributed_single_device_in_process(dataset, merge):
+    """Fast tier-1 cover for make_distributed_sampled_kmeans (both merge
+    modes, incl. the replicated merge's multi-seed restarts) on the real
+    1-device mesh; the 8-device semantics run in the slow subprocess test."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import feature_scale, make_distributed_sampled_kmeans
+    x, _ = dataset
+    mesh = compat.make_mesh((1,), ("data",))
+    xd = jax.device_put(x, NamedSharding(mesh, P("data")))
+    fn = make_distributed_sampled_kmeans(mesh, 6, n_sub_per_device=6,
+                                         compression=5, merge=merge)
+    res = fn(xd, jax.random.PRNGKey(0))
+    xs, _ = feature_scale(x)
+    ref = float(standard_kmeans(xs, 6, iters=30, scale=False).sse)
+    rel = (float(res.sse) - ref) / ref
+    assert rel < 0.15, (merge, rel)
+
+
+@pytest.mark.slow
 def test_distributed_shard_map_8dev():
     """Runs in a subprocess so the 8-device XLA flag does not leak."""
     r = subprocess.run([sys.executable, "-c", _DIST_SCRIPT],

@@ -1,0 +1,237 @@
+"""Streaming engine (repro.stream): quality vs the batch oracle on a
+drifting stream, coreset/reseed invariants, shard_map wrapper, incremental
+clustered-KV refresh, and the serve-engine integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sampled_kmeans, sse
+from repro.data.synthetic import drifting_blobs
+from repro.stream import (StreamConfig, StreamingClusterer, fold_coreset,
+                          make_sharded_update, refresh_clustered_cache,
+                          refresh_layer_cache, reseed_dead_centers)
+
+
+@pytest.fixture(scope="module")
+def drift_stream():
+    # 12 chunks x 1024 points, mild drift: the acceptance workload
+    return drifting_blobs(12, 1024, n_clusters=6, dim=2, seed=0, drift=0.02)
+
+
+def _stream_all(sc, chunks, dim=2):
+    state = sc.init(dim=dim, key=jax.random.PRNGKey(0))
+    for ch in chunks:
+        state = sc.update(state, jnp.asarray(ch))
+    return state
+
+
+def test_stream_sse_within_15pct_of_batch_oracle(drift_stream):
+    """Acceptance: after streaming chunk-by-chunk, SSE on the *full* history
+    is within 15% of a batch sampled_kmeans run on all points at once."""
+    chunks, _, _ = drift_stream
+    k, dim = 6, 2
+    sc = StreamingClusterer(StreamConfig(k=k, n_sub=8, compression=4,
+                                         buffer_size=512, decay=0.97))
+    state = _stream_all(sc, chunks, dim)
+    full = jnp.asarray(chunks.reshape(-1, dim))
+    oracle = sampled_kmeans(full, k, n_sub=8, compression=5,
+                            key=jax.random.PRNGKey(0))
+    stream_sse = float(sse(full, state.centers))
+    assert stream_sse <= 1.15 * float(oracle.sse), \
+        (stream_sse, float(oracle.sse))
+
+
+def test_stream_update_pure_and_deterministic(drift_stream):
+    chunks, _, _ = drift_stream
+    sc = StreamingClusterer(StreamConfig(k=6, n_sub=8, buffer_size=256))
+    s0 = sc.init(dim=2, key=jax.random.PRNGKey(3))
+    c = jnp.asarray(chunks[0])
+    s1 = sc.update(s0, c)
+    s2 = sc.update(s0, c)  # same state in -> same state out (s0 untouched)
+    np.testing.assert_array_equal(np.asarray(s1.centers),
+                                  np.asarray(s2.centers))
+    assert int(s0.step) == 0 and int(s1.step) == 1
+    assert float(s1.n_seen) == chunks[0].shape[0]
+
+
+def test_stream_tracks_drift_better_than_frozen():
+    """Strong drift: the streaming centers must track the moving truth far
+    better than a clustering frozen after the first chunk."""
+    k, dim = 5, 2
+    chunks, _, traj = drifting_blobs(20, 512, n_clusters=k, dim=dim,
+                                     seed=2, drift=0.15)
+    sc = StreamingClusterer(StreamConfig(k=k, n_sub=4, compression=4,
+                                         buffer_size=256, decay=0.8))
+    state = _stream_all(sc, chunks, dim)
+    frozen = sampled_kmeans(jnp.asarray(chunks[0]), k,
+                            key=jax.random.PRNGKey(0)).centers
+
+    def rmse(found):
+        d = np.linalg.norm(np.asarray(found)[None] - traj[-1][:, None],
+                           axis=-1)
+        return float(np.sqrt((d.min(1) ** 2).mean()))
+
+    assert rmse(state.centers) < 0.5 * rmse(frozen), \
+        (rmse(state.centers), rmse(frozen))
+
+
+def test_fold_coreset_bounded_decay_eviction():
+    buf = jnp.asarray([[0.0], [1.0], [2.0]])
+    w = jnp.asarray([5.0, 0.1, 3.0])
+    new = jnp.asarray([[9.0], [8.0]])
+    nw = jnp.asarray([4.0, 0.05])
+    pts, ws = fold_coreset(buf, w, new, nw, decay=0.5)
+    assert pts.shape == buf.shape and ws.shape == w.shape
+    # decayed weights (2.5, .05, 1.5) + new (4, .05): heaviest 3 survive
+    kept = sorted(np.asarray(pts).ravel().tolist())
+    assert kept == [0.0, 2.0, 9.0]
+    np.testing.assert_allclose(sorted(np.asarray(ws).tolist()),
+                               [1.5, 2.5, 4.0])
+
+
+def test_reseed_replaces_unsupported_centers():
+    coreset = jnp.asarray([[0.0, 0.0], [10.0, 10.0], [20.0, 0.0]])
+    w = jnp.asarray([1.0, 5.0, 5.0])
+    # center 0 sits on the data; center 1 is far from every coreset point
+    centers = jnp.asarray([[0.0, 0.0], [-100.0, -100.0]])
+    out = np.asarray(reseed_dead_centers(centers, coreset, w, 1e-6))
+    np.testing.assert_allclose(out[0], [0.0, 0.0])  # alive: untouched
+    # dead center reseeded onto a heavy, badly covered coreset point
+    assert min(np.linalg.norm(out[1] - np.asarray(coreset), axis=1)) < 1e-5
+    assert np.linalg.norm(out[1] - np.asarray([0.0, 0.0])) > 1.0
+
+
+def test_cold_start_self_heals(drift_stream):
+    """init() starts at all-zero centers; after a few updates every center
+    must have support (no center stuck at the origin)."""
+    chunks, _, _ = drift_stream
+    sc = StreamingClusterer(StreamConfig(k=6, n_sub=8, buffer_size=512))
+    state = sc.init(dim=2)
+    for ch in chunks[:4]:
+        state = sc.update(state, jnp.asarray(ch))
+    idx, _ = sc.query(state, jnp.asarray(chunks[3]))
+    occupied = np.unique(np.asarray(idx)).size
+    assert occupied == 6, occupied
+
+
+def test_sharded_update_runs_and_matches_semantics(drift_stream):
+    """shard_map wrapper on a 1-device mesh: same fixed-point semantics
+    (replicated state, finite centers, step/n_seen bookkeeping)."""
+    from repro.launch.mesh import make_host_mesh
+    chunks, _, _ = drift_stream
+    sc = StreamingClusterer(StreamConfig(k=6, n_sub=8, buffer_size=256))
+    upd = make_sharded_update(sc, make_host_mesh(1, 1))
+    state = sc.init(dim=2)
+    for ch in chunks[:3]:
+        state = upd(state, jnp.asarray(ch))
+    assert int(state.step) == 3
+    assert float(state.n_seen) == 3 * chunks[0].shape[0]
+    assert bool(jnp.all(jnp.isfinite(state.centers)))
+
+
+def test_kv_refresh_conserves_mass(rng):
+    n, W, dh = 16, 8, 4
+    kc = jnp.asarray(rng.normal(size=(2, 2, n, dh)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 2, n, dh)), jnp.float32)
+    counts = jnp.asarray(rng.uniform(1, 5, (2, 2, n)), jnp.float32)
+    wk = jnp.asarray(rng.normal(size=(2, 2, W, dh)), jnp.float32)
+    wv = jnp.asarray(rng.normal(size=(2, 2, W, dh)), jnp.float32)
+    valid = jnp.ones((2, 2, W), jnp.float32).at[:, :, 6:].set(0.0)
+    _, _, ncnt = refresh_clustered_cache(kc, vc, counts, wk, wv, valid,
+                                         iters=3)
+    np.testing.assert_allclose(float(ncnt.sum()),
+                               float(counts.sum() + valid.sum()), rtol=1e-5)
+
+
+def test_kv_refresh_identical_window_lossless():
+    """Folding a window of identical keys/values into empty centroids must
+    produce a centroid exactly at that key with the value preserved."""
+    n, W, dh = 4, 8, 3
+    kc = jnp.zeros((1, 1, n, dh))
+    vc = jnp.zeros((1, 1, n, dh))
+    counts = jnp.zeros((1, 1, n))
+    wk = jnp.ones((1, 1, W, dh)) * 0.7
+    wv = jnp.ones((1, 1, W, dh)) * -2.0
+    valid = jnp.ones((1, 1, W))
+    nkc, nvc, ncnt = refresh_clustered_cache(kc, vc, counts, wk, wv, valid,
+                                             iters=2)
+    live = np.asarray(ncnt[0, 0]) > 0
+    np.testing.assert_allclose(np.asarray(nkc[0, 0])[live], 0.7, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(nvc[0, 0])[live], -2.0, rtol=1e-5)
+    np.testing.assert_allclose(float(ncnt.sum()), W, rtol=1e-6)
+
+
+def test_refresh_layer_cache_absorbs_window(rng):
+    L, B, kv, n, W, dh = 2, 1, 2, 8, 4, 4
+    cache = {
+        "kc": jnp.zeros((L, B, kv, n, dh)),
+        "vc": jnp.zeros((L, B, kv, n, dh)),
+        "counts": jnp.zeros((L, B, kv, n)),
+        "wk": jnp.asarray(rng.normal(size=(L, B, kv, W, dh)), jnp.float32),
+        "wv": jnp.asarray(rng.normal(size=(L, B, kv, W, dh)), jnp.float32),
+        "slot_pos": jnp.asarray(np.tile(np.arange(W), (L, 1)), jnp.int32),
+    }
+    out = refresh_layer_cache(cache, jnp.asarray(W - 1, jnp.int32), iters=2)
+    np.testing.assert_allclose(float(out["counts"].sum()), L * B * kv * W,
+                               rtol=1e-5)
+    assert bool((out["slot_pos"] == -1).all())
+
+
+def test_serve_engine_recompress_nested_cache():
+    """gemma-style caches nest the clustered sub-cache one level down
+    ({"super": {"local":…, "global": {kc,…}}}); the refresh must recurse
+    into it rather than silently skipping (regression for the flat-layout
+    special case)."""
+    from repro.configs import ShapeConfig, get_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("gemma3-12b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("c", 64, 1, "decode", cluster_compression=8,
+                        cluster_window=16)
+    eng = ServeEngine(cfg, shape, params,
+                      ServeConfig(max_tokens=4, recompress_every=16))
+    caches, _, _ = eng.prefill(jnp.ones((1, 20), jnp.int32))
+    assert float(caches["super"]["global"]["counts"].sum()) > 0.0
+
+
+def test_serve_engine_rejects_lossy_recompress_cadence():
+    """recompress_every > cluster_window would let the ring evict tokens
+    before any refresh folds them — the engine must refuse the config."""
+    from repro.configs import ShapeConfig, get_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("c", 64, 1, "decode", cluster_compression=8,
+                        cluster_window=16)
+    with pytest.raises(ValueError, match="cluster_window"):
+        ServeEngine(cfg, shape, params,
+                    ServeConfig(max_tokens=4, recompress_every=64))
+
+
+def test_serve_engine_incremental_recompress():
+    """End-to-end: clustered-cache generation with recompress_every set
+    runs, stays shape-correct, and actually populates the centroid cache."""
+    from repro.configs import ShapeConfig, get_config
+    from repro.models.registry import build_model
+    from repro.serve.engine import ServeConfig, ServeEngine
+
+    cfg = get_config("llama3-8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("c", 64, 1, "decode", cluster_compression=8,
+                        cluster_window=16)
+    eng = ServeEngine(cfg, shape, params,
+                      ServeConfig(max_tokens=6, recompress_every=8))
+    assert eng.kind == "clustered"
+    caches, _, pos = eng.prefill(jnp.ones((1, 10), jnp.int32))
+    # one refresh fired during the 10-token prefill (at position 8)
+    assert float(caches["blocks"]["counts"].sum()) > 0.0
+    out = eng.generate(jnp.ones((1, 10), jnp.int32))
+    assert out.shape == (1, 6)

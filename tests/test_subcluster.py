@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (equal_partition, feature_scale, gather_partitions,
                         unequal_landmarks, unequal_partition, unscale)

@@ -57,15 +57,15 @@ _DRYRUN_SMALL = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses, jax
+from repro import compat
 from repro.configs import get_config, ShapeConfig
 from repro.launch.dryrun import build_train_program, build_decode_program, lower_compile
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat.make_mesh((4, 2), ("data", "model"))
 cfg = dataclasses.replace(
     get_config("llama3-8b"), n_layers=2, d_model=256, n_heads=8, n_kv_heads=4,
     head_dim=32, d_ff=512, vocab=1024)
 shape = ShapeConfig("t", 128, 8, "train")
-with jax.set_mesh(mesh):
+with compat.set_mesh(mesh):
     fn, args, _ = build_train_program(cfg, shape, mesh)
     compiled, _ = lower_compile(fn, args)
     assert compiled.memory_analysis() is not None
@@ -76,6 +76,7 @@ with jax.set_mesh(mesh):
 """
 
 
+@pytest.mark.slow
 def test_small_mesh_dryrun_subprocess():
     r = subprocess.run([sys.executable, "-c", _DRYRUN_SMALL],
                        capture_output=True, text=True, timeout=600,

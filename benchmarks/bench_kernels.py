@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kmeans import assign_jnp, update_centers
-from repro.kernels import assign_argmin, centroid_update
+from repro.kernels import assign_argmin, centroid_update, lloyd_step
+from repro.kernels.ref import lloyd_step_ref
 
 
 def _bench(fn, *args, iters=5):
@@ -45,6 +46,14 @@ def run(csv):
     i2, d2 = assign_jnp(x, c)
     ok = bool(jnp.mean((i1 == i2).astype(jnp.float32)) > 0.99)
     csv("kernel/assign_pallas_interpret_allclose", 0.0, f"match={ok}")
+    # fused Lloyd step vs the two-pass oracle at the same shape
+    w = jnp.ones((x.shape[0],), jnp.float32)
+    sums, counts, sse, fi, _ = lloyd_step(x, w, c)
+    rsums, rcounts, rsse, _, _ = lloyd_step_ref(x, w, c)
+    ok = bool(jnp.allclose(sums, rsums, rtol=1e-3, atol=1e-3)
+              and jnp.allclose(counts, rcounts)
+              and jnp.allclose(sse, rsse, rtol=1e-3))
+    csv("kernel/lloyd_fused_interpret_allclose", 0.0, f"match={ok}")
     return []
 
 

@@ -6,14 +6,31 @@ parts under a named variant, record hypothesis -> change -> before/after.
 
 Variants are registered below; each is a (description, builder-kwargs /
 monkeypatch) pair.  Results append to benchmarks/artifacts/perf/<cell>.json.
+
+The ``--lloyd`` mode benchmarks one Lloyd iteration through every
+``LloydBackend`` (jnp vs unfused pallas vs fused pallas) instead:
+
+  PYTHONPATH=src python -m benchmarks.perf_iter --lloyd \
+      --m 262144 --d 64 --k 256
+
+On a compiled backend (TPU) it times per-iteration cost and asserts the
+fused kernel beats the unfused one; under the Pallas interpreter (CPU CI)
+it asserts numerics only.  Either way the figures land in
+``benchmarks/artifacts/BENCH_lloyd_M{m}_d{d}_K{k}.json``.
 """
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
+import sys
+
+if "--lloyd" not in sys.argv:
+    # the roofline cells pretend to be a 512-chip pod; the Lloyd bench wants
+    # the real device so its timings mean something
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
 import argparse
 import dataclasses
 import json
 import pathlib
+import time
 
 import jax
 
@@ -159,8 +176,92 @@ def record(arch, shape_name, variant, hypothesis, total: PartCost):
     return entry
 
 
+def run_lloyd_bench(m: int, d: int, k: int, *, timing_iters: int = 5,
+                    assert_speedup: float | None = None) -> dict:
+    """Per-Lloyd-iteration cost of every registered backend on one shape.
+
+    Numerics are always cross-checked against the jnp oracle.  Timing is
+    only meaningful with compiled kernels — under the interpreter the
+    check shrinks the shape and records the mode so nobody mistakes
+    interpreter overhead for a kernel regression.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.backend import get_backend
+    from repro.kernels import default_interpret
+    from repro.kernels.ref import lloyd_step_ref
+
+    interpret = default_interpret()
+    tm, td, tk = (min(m, 2048), d, min(k, 64)) if interpret else (m, d, k)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(tm, td)), jnp.float32)
+    w = jnp.ones((tm,), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(tk, td)), jnp.float32)
+
+    ref = lloyd_step_ref(x, w, c)
+    entry = {
+        "bench": "lloyd_step", "mode": "interpret" if interpret else "compiled",
+        "requested": {"m": m, "d": d, "k": k},
+        "measured": {"m": tm, "d": td, "k": tk},
+        "backends": {},
+    }
+    for name in ("jnp", "pallas", "pallas_fused"):
+        be = get_backend(name)
+        prep = be.prepare(x, w)
+        step = jax.jit(lambda centers, be=be, prep=prep: be.step(prep, centers))
+        sums, counts, sse = jax.block_until_ready(step(c))
+        np.testing.assert_allclose(np.asarray(sums), np.asarray(ref[0]),
+                                   rtol=1e-3, atol=1e-3)
+        np.testing.assert_allclose(np.asarray(counts), np.asarray(ref[1]),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(sse), float(ref[2]), rtol=1e-3)
+        times = []
+        for _ in range(timing_iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(step(c))
+            times.append(time.perf_counter() - t0)
+        entry["backends"][name] = {
+            "us_per_iter": float(np.median(times) * 1e6),
+            "numerics_ok": True,
+        }
+
+    b = entry["backends"]
+    entry["speedup_fused_vs_pallas"] = (
+        b["pallas"]["us_per_iter"] / b["pallas_fused"]["us_per_iter"])
+    entry["speedup_fused_vs_jnp"] = (
+        b["jnp"]["us_per_iter"] / b["pallas_fused"]["us_per_iter"])
+
+    PERF.parent.mkdir(parents=True, exist_ok=True)
+    out = PERF.parent / f"BENCH_lloyd_M{m}_d{d}_K{k}.json"
+    out.write_text(json.dumps(entry, indent=1))
+    entry["json"] = str(out)
+
+    if assert_speedup is not None and not interpret:
+        got = entry["speedup_fused_vs_pallas"]
+        assert got >= assert_speedup, (
+            f"fused Lloyd step only {got:.2f}x over the unfused pallas path "
+            f"(wanted >= {assert_speedup}x)")
+    return entry
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    if "--lloyd" in sys.argv:
+        ap.add_argument("--lloyd", action="store_true")
+        ap.add_argument("--m", type=int, default=262144)
+        ap.add_argument("--d", type=int, default=64)
+        ap.add_argument("--k", type=int, default=256)
+        ap.add_argument("--timing-iters", type=int, default=5)
+        ap.add_argument("--min-speedup", type=float, default=1.5,
+                        help="assert fused >= this x over unfused pallas "
+                             "(compiled mode only)")
+        args = ap.parse_args()
+        e = run_lloyd_bench(args.m, args.d, args.k,
+                            timing_iters=args.timing_iters,
+                            assert_speedup=args.min_speedup)
+        print(json.dumps(e, indent=1))
+        sys.exit(0)
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True)
     ap.add_argument("--variant", default="baseline")

@@ -2,11 +2,15 @@
 
 Public API:
   kmeans, KMeansResult            — weighted Lloyd's algorithm
+  get_backend, register_backend   — LloydBackend registry (jnp | pallas |
+                                    pallas_fused | auto, REPRO_KMEANS_BACKEND)
   equal_partition, unequal_partition, feature_scale — the two subclustering schemes
   sampled_kmeans, standard_kmeans — the paper's two-level method + baseline
   make_distributed_sampled_kmeans — pod-scale shard_map version
   sse, relative_error, clustering_accuracy — metrics
 """
+from .backend import (LloydBackend, PallasBackend, PallasFusedBackend,
+                      available_backends, get_backend, register_backend)
 from .kmeans import (KMeansResult, assign_jnp, kmeans, kmeans_lloyd_step,
                      kmeans_pp_init, landmark_init, pairwise_sqdist,
                      random_init, update_centers)
@@ -27,5 +31,7 @@ __all__ = [
     "SampledClusteringResult", "sampled_kmeans", "standard_kmeans",
     "local_stage", "DistributedClusteringResult",
     "make_distributed_sampled_kmeans", "sse", "relative_error",
-    "clustering_accuracy",
+    "clustering_accuracy", "LloydBackend", "PallasBackend",
+    "PallasFusedBackend", "get_backend", "register_backend",
+    "available_backends",
 ]

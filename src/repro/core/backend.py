@@ -1,0 +1,237 @@
+"""The ``LloydBackend`` registry: one abstraction for every k-means hot loop.
+
+Every layer that runs Lloyd iterations (batch pipeline, distributed merge,
+streaming coreset fold, serve recompression, gradient compression) used to
+plumb a bare ``assign_fn`` callable around and pay a one-hot centroid update
+plus a fresh pad/copy *inside* the iteration loop.  A backend instead owns
+
+  * ``prepare(x, weights)``  — pad/layout ONCE per ``kmeans()`` call, hoisted
+    out of the Lloyd loop;
+  * ``assign(prep, centers)``  — nearest-center id + squared distance;
+  * ``step(prep, centers)``  — one Lloyd pass returning the RAW weighted
+    per-cluster ``(sums, counts, sse)`` statistics (fp32).  Raw, so the
+    distributed merge can psum them across the mesh before dividing;
+  * ``sse(prep, centers)``  — weighted SSE only.
+
+Built-in backends:
+
+  ``jnp``           pure-jnp reference (pairwise matrix + one-hot matmul)
+  ``pallas``        unfused Pallas kernels (assign + centroid, two passes)
+  ``pallas_fused``  the fused single-pass kernel (kernels/lloyd.py)
+  ``auto``          ``pallas_fused`` on TPU, ``jnp`` elsewhere (the Pallas
+                    interpreter is correctness-, not speed-, oriented)
+
+Selection: pass ``backend="..."`` (or an instance) through any k-means entry
+point; every entry point defaults to ``"auto"``, and ``"auto"`` consults the
+``REPRO_KMEANS_BACKEND`` environment variable before falling back to
+hardware autodetect — so the env var steers a whole process without code
+changes while an explicit name in code still wins.  ``register_backend``
+adds custom entries.
+"""
+from __future__ import annotations
+
+import os
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+ENV_VAR = "REPRO_KMEANS_BACKEND"
+
+
+class Prepared(NamedTuple):
+    """Padded point set, built once per ``kmeans()`` call.
+
+    ``xp``/``wp`` are the (possibly) padded arrays the kernels consume;
+    ``m``/``d`` the original static sizes (padding rows carry zero weight,
+    so they contribute to no statistic).
+    """
+    xp: Array   # (Mp, dp)
+    wp: Array   # (Mp,)
+    m: int
+    d: int
+
+
+class LloydBackend:
+    """Base class: the jnp reference implementation, and the contract."""
+
+    name = "jnp"
+
+    def prepare(self, x: Array, weights: Optional[Array] = None) -> Prepared:
+        m, d = x.shape
+        if weights is None:
+            weights = jnp.ones((m,), x.dtype)
+        return Prepared(x, weights.astype(x.dtype), m, d)
+
+    def assign(self, prep: Prepared, centers: Array) -> tuple[Array, Array]:
+        x = prep.xp[:prep.m, :prep.d]
+        x2 = jnp.sum(x * x, axis=-1, keepdims=True)
+        c2 = jnp.sum(centers * centers, axis=-1)
+        d2 = jnp.maximum(x2 + c2[None, :] - 2.0 * (x @ centers.T), 0.0)
+        idx = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        mind = jnp.take_along_axis(d2, idx[:, None], axis=-1)[:, 0]
+        return idx, mind
+
+    def step(self, prep: Prepared, centers: Array
+             ) -> tuple[Array, Array, Array]:
+        idx, mind = self.assign(prep, centers)
+        w = prep.wp[:prep.m].astype(jnp.float32)
+        k = centers.shape[0]
+        onehot = jax.nn.one_hot(idx, k, dtype=jnp.float32) * w[:, None]
+        x = prep.xp[:prep.m, :prep.d].astype(jnp.float32)
+        sums = onehot.T @ x
+        counts = onehot.sum(axis=0)
+        sse = jnp.sum(mind * w)
+        return sums, counts, sse
+
+    def sse(self, prep: Prepared, centers: Array) -> Array:
+        _, mind = self.assign(prep, centers)
+        return jnp.sum(mind * prep.wp[:prep.m].astype(jnp.float32))
+
+    # convenience for one-shot call sites (query paths, metrics)
+    def assign_points(self, x: Array, centers: Array) -> tuple[Array, Array]:
+        return self.assign(self.prepare(x), centers)
+
+    def __repr__(self):
+        return f"<LloydBackend {self.name}>"
+
+
+class PallasBackend(LloydBackend):
+    """Unfused Pallas kernels: separate assignment and centroid passes.
+
+    Padding still happens once (``prepare``), which already retires the
+    per-iteration pad/copy the old ``ops.assign_argmin``-as-``assign_fn``
+    route paid, but each Lloyd iteration reads ``x`` twice.
+    """
+
+    name = "pallas"
+
+    def __init__(self, *, block_m: int = 256, block_k: int = 256,
+                 interpret: bool | None = None):
+        self.block_m = block_m
+        self.block_k = block_k
+        self.interpret = interpret
+
+    def prepare(self, x: Array, weights: Optional[Array] = None) -> Prepared:
+        from repro.kernels.ops import padded_layout
+        m, d = x.shape
+        _, mp, dp = padded_layout(m, d, self.block_m)
+        xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+        if weights is None:
+            wp = jnp.ones((m,), x.dtype)
+        else:
+            wp = weights.astype(x.dtype)
+        wp = jnp.pad(wp, (0, mp - m))
+        return Prepared(xp, wp, m, d)
+
+    def _block_m(self, prep: Prepared) -> int:
+        from repro.kernels.ops import padded_layout
+        return padded_layout(prep.m, prep.d, self.block_m)[0]
+
+    def _pad_centers(self, prep: Prepared, centers: Array) -> Array:
+        dp = prep.xp.shape[1]
+        return jnp.pad(centers, ((0, 0), (0, dp - prep.d)))
+
+    def assign(self, prep: Prepared, centers: Array) -> tuple[Array, Array]:
+        from repro.kernels import pad_to
+        from repro.kernels.assign import assign_argmin_pallas
+        cp = self._pad_centers(prep, centers)
+        idx, dist = assign_argmin_pallas(
+            prep.xp, cp, block_m=self._block_m(prep),
+            block_k=min(self.block_k, pad_to(centers.shape[0], 8)),
+            interpret=self.interpret)
+        return idx[:prep.m], dist[:prep.m]
+
+    def step(self, prep: Prepared, centers: Array
+             ) -> tuple[Array, Array, Array]:
+        from repro.kernels import pad_to
+        from repro.kernels.assign import assign_argmin_pallas
+        from repro.kernels.centroid import centroid_update_pallas
+        k = centers.shape[0]
+        cp = self._pad_centers(prep, centers)
+        idx, dist = assign_argmin_pallas(
+            prep.xp, cp, block_m=self._block_m(prep),
+            block_k=min(self.block_k, pad_to(k, 8)),
+            interpret=self.interpret)
+        sums, counts = centroid_update_pallas(
+            prep.xp, idx, prep.wp, k,
+            block_m=self._block_m(prep), interpret=self.interpret)
+        sse = jnp.sum(dist[:prep.m]
+                      * prep.wp[:prep.m].astype(jnp.float32))
+        return sums[:, :prep.d], counts, sse
+
+
+class PallasFusedBackend(PallasBackend):
+    """Fused single-pass backend (kernels/lloyd.py): assignment, weighted
+    accumulation, and SSE in ONE walk over ``x`` per Lloyd iteration — no
+    assignment vector or one-hot matrix in HBM."""
+
+    name = "pallas_fused"
+
+    def step(self, prep: Prepared, centers: Array
+             ) -> tuple[Array, Array, Array]:
+        from repro.kernels.lloyd import lloyd_step_pallas
+        cp = self._pad_centers(prep, centers)
+        sums, counts, sse, _, _ = lloyd_step_pallas(
+            prep.xp, prep.wp, cp, block_m=self._block_m(prep),
+            block_k=self.block_k, interpret=self.interpret)
+        return sums[:, :prep.d], counts, sse
+
+
+class AssignFnBackend(LloydBackend):
+    """Adapter for the legacy ``assign_fn`` callables — jnp statistics with
+    a custom assignment step.  Exists so ``kmeans(assign_fn=...)`` keeps
+    working; new code should pass ``backend=`` instead."""
+
+    name = "assign_fn"
+
+    def __init__(self, assign_fn: Callable[[Array, Array],
+                                           tuple[Array, Array]]):
+        self._assign_fn = assign_fn
+
+    def assign(self, prep: Prepared, centers: Array) -> tuple[Array, Array]:
+        return self._assign_fn(prep.xp[:prep.m, :prep.d], centers)
+
+
+BackendSpec = Union[str, LloydBackend, None]
+
+_REGISTRY: dict[str, Callable[[], LloydBackend]] = {
+    "jnp": LloydBackend,
+    "pallas": PallasBackend,
+    "pallas_fused": PallasFusedBackend,
+}
+
+
+def register_backend(name: str, factory: Callable[[], LloydBackend]) -> None:
+    """Register a custom backend under ``name`` (callable returning an
+    instance; called per ``get_backend`` resolution)."""
+    _REGISTRY[name] = factory
+
+
+def _resolve_auto() -> str:
+    return "pallas_fused" if jax.default_backend() == "tpu" else "jnp"
+
+
+def get_backend(spec: BackendSpec = None) -> LloydBackend:
+    """Resolve a backend: instance passthrough, name lookup, or ``None`` /
+    ``"auto"`` -> ``REPRO_KMEANS_BACKEND`` env override, then hardware
+    autodetect (fused on TPU, jnp elsewhere)."""
+    if isinstance(spec, LloydBackend):
+        return spec
+    name = spec or "auto"
+    if name == "auto":
+        name = os.environ.get(ENV_VAR) or "auto"
+    if name == "auto":
+        name = _resolve_auto()
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise ValueError(
+            f"unknown k-means backend {name!r}; known: "
+            f"{sorted(_REGISTRY)} + 'auto'") from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY)) + ("auto",)

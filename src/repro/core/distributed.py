@@ -29,7 +29,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
-from .kmeans import AssignFn, assign_jnp, kmeans, update_centers
+from .backend import BackendSpec, LloydBackend, get_backend
+from .kmeans import kmeans
 from .subcluster import equal_partition, gather_partitions, unequal_partition
 
 Array = jax.Array
@@ -56,12 +57,13 @@ def _distributed_merge(
     iters: int,
     key: Array,
     axis: str,
-    assign_fn: AssignFn,
+    backend: LloydBackend,
 ) -> Array:
     """Merge-stage k-means with the *points* (= local centers) left sharded.
 
-    Each Lloyd round: local assignment of this device's centers, local
-    weighted sums/counts, one psum of (k*d + k) floats, replicated update.
+    Each Lloyd round: one ``backend.step`` over this device's centers (raw
+    weighted sums/counts — with the fused backend that is a single pass and
+    no HBM one-hot), one psum of (k*d + k) floats, replicated update.
     """
     # Deterministic, replicated init: gather a candidate pool and run greedy
     # farthest-point (k-center) selection — identical on every device.
@@ -86,12 +88,13 @@ def _distributed_merge(
 
     centers0, _ = jax.lax.fori_loop(1, k, pick, (centers0, min_d))
 
+    prep = backend.prepare(local_centers, local_w)  # pad once, not per round
+
     def body(_, centers):
-        idx, _ = assign_fn(local_centers, centers)
-        onehot = jax.nn.one_hot(idx, k, dtype=local_centers.dtype) * local_w[:, None]
-        sums = jax.lax.psum(onehot.T @ local_centers, axis)
-        counts = jax.lax.psum(onehot.sum(axis=0), axis)
-        new = sums / jnp.maximum(counts, 1e-12)[:, None]
+        sums, counts, _ = backend.step(prep, centers)
+        sums = jax.lax.psum(sums, axis)
+        counts = jax.lax.psum(counts, axis)
+        new = (sums / jnp.maximum(counts, 1e-12)[:, None]).astype(centers.dtype)
         return jnp.where((counts <= 0)[:, None], centers, new)
 
     return jax.lax.fori_loop(0, iters, body, centers0)
@@ -110,11 +113,12 @@ def make_distributed_sampled_kmeans(
     merge: str = "replicated",
     weighted_merge: bool = False,
     capacity_factor: float = 2.0,
-    assign_fn: AssignFn = assign_jnp,
+    backend: BackendSpec = None,
 ):
     """Build a jit-able ``fn(x, key) -> DistributedClusteringResult`` where
     ``x`` is (M, d) sharded along ``axis``.  This is deliverable (a)'s main
     entry point for cluster-scale data."""
+    be = get_backend(backend)
 
     def per_device(xs: Array, key: Array) -> DistributedClusteringResult:
         my = jax.lax.axis_index(axis)
@@ -133,7 +137,7 @@ def make_distributed_sampled_kmeans(
         keys = jax.random.split(jax.random.fold_in(key, 1), n_sub_per_device)
         local = jax.vmap(
             lambda p, w, kk: kmeans(p, k_local, weights=w, iters=local_iters,
-                                    key=kk, assign_fn=assign_fn)
+                                    key=kk, backend=be)
         )(parts, part_w, keys)
 
         d = xs.shape[-1]
@@ -147,13 +151,13 @@ def make_distributed_sampled_kmeans(
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
             merged = kmeans(all_c, k, weights=all_w, iters=global_iters,
-                            key=jax.random.PRNGKey(17), assign_fn=assign_fn,
+                            key=jax.random.PRNGKey(17), backend=be,
                             restarts=4)  # same multi-seed guard as the
                                          # batch pipeline's merge stage
             centers = merged.centers
         elif merge == "distributed":
             centers = _distributed_merge(lc, merge_w, k, global_iters,
-                                         jax.random.PRNGKey(17), axis, assign_fn)
+                                         jax.random.PRNGKey(17), axis, be)
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
         else:

@@ -5,17 +5,21 @@ the gathered local centers.  Everything is static-shape / jit / vmap friendly:
 
   * points may carry *weights* (0 = padded/masked point) so capacity-padded
     partitions from :mod:`repro.core.subcluster` cluster correctly;
-  * the assignment step is pluggable (``assign_fn``) so the Pallas kernel in
-    :mod:`repro.kernels` can replace the pure-jnp path on TPU;
+  * the Lloyd machinery is pluggable through the :class:`LloydBackend`
+    registry (:mod:`repro.core.backend`): ``"jnp"`` reference, unfused
+    ``"pallas"`` kernels, the fused single-pass ``"pallas_fused"`` kernel, or
+    ``"auto"`` (env-overridable via ``REPRO_KMEANS_BACKEND``).  Padding is
+    done once per call, outside the iteration loop;
   * empty clusters keep their previous center (standard Lloyd fix-up).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+from .backend import BackendSpec, LloydBackend, AssignFnBackend, get_backend
 
 Array = jax.Array
 
@@ -63,15 +67,34 @@ def update_centers(
     return jnp.where(keep_old, old_centers, new), counts
 
 
+def _centers_from_stats(sums: Array, counts: Array, old_centers: Array
+                        ) -> Array:
+    """Divide raw backend statistics, keeping old centers for empty
+    clusters (standard Lloyd fix-up) and the carry dtype stable."""
+    new = (sums / jnp.maximum(counts, 1e-12)[:, None]).astype(old_centers.dtype)
+    return jnp.where((counts <= 0.0)[:, None], old_centers, new)
+
+
 # ---------------------------------------------------------------------------
 # Initialisation schemes
 # ---------------------------------------------------------------------------
 
 def random_init(x: Array, weights: Array, k: int, key: Array) -> Array:
-    """Sample k points with probability proportional to their weight."""
-    m = x.shape[0]
-    logits = jnp.where(weights > 0, 0.0, -jnp.inf)
-    ids = jax.random.categorical(key, logits, shape=(k,))
+    """Sample k distinct points with probability proportional to weight.
+
+    Gumbel top-k gives weighted sampling *without replacement*, so k centers
+    cannot collide on small partitions (collided centers = permanently dead
+    clusters under the keep-old-center fix-up).  If fewer than k points have
+    positive weight the remainder falls back to with-replacement draws among
+    the valid points (duplicates are then unavoidable).
+    """
+    logits = jnp.where(weights > 0, jnp.log(jnp.maximum(weights, 1e-30)),
+                       -jnp.inf)
+    key_g, key_fb = jax.random.split(key)
+    scores = logits + jax.random.gumbel(key_g, logits.shape)
+    top_scores, ids = jax.lax.top_k(scores, k)
+    fallback = jax.random.categorical(key_fb, logits, shape=(k,))
+    ids = jnp.where(jnp.isfinite(top_scores), ids, fallback)
     return x[ids]
 
 
@@ -90,12 +113,8 @@ def landmark_init(x: Array, weights: Array, k: int, key: Array | None = None) ->
     return lo[None, :] + t * (hi - lo)[None, :]
 
 
-def kmeans_pp_init(
-    x: Array, weights: Array, k: int, key: Array,
-    assign_fn: AssignFn = assign_jnp,
-) -> Array:
+def kmeans_pp_init(x: Array, weights: Array, k: int, key: Array) -> Array:
     """k-means++ (D^2 weighting), incremental min-distance bookkeeping."""
-    del assign_fn  # incremental form below is cheaper than full assignment
     m = x.shape[0]
     key0, key_loop = jax.random.split(key)
     first = jax.random.categorical(key0, jnp.where(weights > 0, 0.0, -jnp.inf))
@@ -127,6 +146,18 @@ _INITS = {
 }
 
 
+def _jittered_array_init(init: Array, x: Array, key: Array,
+                         r: Array | int) -> Array:
+    """Restart r of an explicit array init: r=0 keeps the given centers
+    verbatim; r>0 perturbs them with noise scaled to the per-dimension
+    spread of the *data* (not the init — a degenerate init with coincident
+    centers has zero spread, and that is exactly when jitter matters)."""
+    sigma = 0.05 * jnp.std(x, axis=0, keepdims=True).astype(init.dtype) + 1e-6
+    noise = sigma * jax.random.normal(key, init.shape, init.dtype)
+    keep = jnp.asarray(r, jnp.int32) == 0
+    return jnp.where(keep, init, init + noise)
+
+
 # ---------------------------------------------------------------------------
 # Lloyd's algorithm
 # ---------------------------------------------------------------------------
@@ -139,7 +170,8 @@ def kmeans(
     iters: int = 25,
     key: Optional[Array] = None,
     init: str | Array = "kmeans++",
-    assign_fn: AssignFn = assign_jnp,
+    backend: BackendSpec = None,
+    assign_fn: Optional[AssignFn] = None,
     restarts: int = 1,
 ) -> KMeansResult:
     """Weighted Lloyd's k-means with a fixed iteration budget.
@@ -148,6 +180,12 @@ def kmeans(
     static-trip-count ``fori_loop``: vmap-able across subclusters, shard_map
     friendly, and — at pod scale — a straggler-mitigation device in itself
     (every subcluster costs the same, no data-dependent tail).
+
+    ``backend`` selects the Lloyd machinery (see :mod:`repro.core.backend`);
+    ``assign_fn`` is the legacy hook, adapted onto the registry when given.
+    With ``restarts > 1`` the lowest-SSE of several independent runs wins;
+    an explicit array ``init`` participates too (restart 0 uses it verbatim,
+    later restarts jitter it — see :func:`_jittered_array_init`).
     """
     m = x.shape[0]
     if weights is None:
@@ -156,42 +194,52 @@ def kmeans(
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    def one_run(kk):
-        if isinstance(init, str):
-            centers = _INITS[init](x, weights, k, kk)
-        else:
-            centers = init
+    be = AssignFnBackend(assign_fn) if assign_fn is not None \
+        else get_backend(backend)
+    prep = be.prepare(x, weights)   # pad ONCE, outside the Lloyd loop
+    w32 = weights.astype(jnp.float32)
 
+    def lloyd(centers0):
         def body(_, centers):
-            idx, _ = assign_fn(x, centers)
-            new_centers, _ = update_centers(x, weights, idx, k, centers)
-            return new_centers
+            sums, counts, _ = be.step(prep, centers)
+            return _centers_from_stats(sums, counts, centers)
 
-        centers = jax.lax.fori_loop(0, iters, body, centers)
-        idx, mind = assign_fn(x, centers)
-        sse = jnp.sum(mind * weights)
+        centers = jax.lax.fori_loop(0, iters, body, centers0)
+        idx, mind = be.assign(prep, centers)
+        sse = jnp.sum(mind * w32)
         return centers, idx, sse
 
-    if restarts <= 1 or not isinstance(init, str):
-        centers, idx, sse = one_run(key)
+    def one_run(kk, r):
+        if isinstance(init, str):
+            centers0 = _INITS[init](x, weights, k, kk)
+        else:
+            centers0 = _jittered_array_init(init, x, kk, r)
+        return lloyd(centers0)
+
+    if restarts <= 1:
+        centers, idx, sse = one_run(key, 0)
     else:
         # multi-seed restart: rerun Lloyd from independent inits, keep the
-        # lowest-SSE solution (vmap'd so the restarts batch on device)
+        # lowest-SSE solution (vmap'd so the restarts batch on device);
+        # an array init restarts from jittered copies of itself (r=0 exact)
         keys = jax.random.split(key, restarts)
-        centers_r, idx_r, sse_r = jax.vmap(one_run)(keys)
+        centers_r, idx_r, sse_r = jax.vmap(one_run)(keys, jnp.arange(restarts))
         best = jnp.argmin(sse_r)
         centers = jnp.take(centers_r, best, axis=0)
         idx = jnp.take(idx_r, best, axis=0)
         sse = jnp.take(sse_r, best, axis=0)
 
-    _, counts = update_centers(x, weights, idx, k, centers)
+    counts = jnp.zeros((k,), weights.dtype).at[idx].add(weights)
     return KMeansResult(centers, idx, sse, counts, jnp.asarray(iters))
 
 
 def kmeans_lloyd_step(
-    x: Array, centers: Array, weights: Array, assign_fn: AssignFn = assign_jnp
+    x: Array, centers: Array, weights: Array,
+    backend: BackendSpec = None,
 ) -> tuple[Array, Array]:
-    """One exposed Lloyd iteration (used by the roofline cost parts and the
-    distributed merge loop)."""
-    idx, _ = assign_fn(x, centers)
-    return update_centers(x, weights, idx, centers.shape[0], centers)
+    """One exposed Lloyd iteration (used by the roofline cost parts and
+    tests)."""
+    be = get_backend(backend)
+    prep = be.prepare(x, weights)
+    sums, counts, _ = be.step(prep, centers)
+    return _centers_from_stats(sums, counts, centers), counts

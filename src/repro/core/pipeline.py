@@ -10,7 +10,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from .kmeans import AssignFn, KMeansResult, assign_jnp, kmeans
+from .backend import BackendSpec, get_backend
+from .kmeans import KMeansResult, kmeans
 from .metrics import sse as sse_fn
 from .subcluster import (Partition, equal_partition, feature_scale,
                          gather_partitions, unequal_partition, unscale)
@@ -34,17 +35,18 @@ def local_stage(
     iters: int,
     key: Array,
     init: str = "kmeans++",
-    assign_fn: AssignFn = assign_jnp,
+    backend: BackendSpec = None,
 ) -> KMeansResult:
     """vmap'd per-partition k-means — the paper's "device part".  On the CUDA
     original each subcluster ran on one thread block; here each is one lane of
     a vmap that shard_map spreads across the mesh."""
     n_parts = parts.shape[0]
     keys = jax.random.split(key, n_parts)
+    be = get_backend(backend)  # resolve once; vmap batches the prepared data
     return jax.vmap(
         lambda p, w, kk: kmeans(
             p, k_local, weights=w, iters=iters, key=kk, init=init,
-            assign_fn=assign_fn)
+            backend=be)
     )(parts, part_w, keys)
 
 
@@ -62,7 +64,7 @@ def sampled_kmeans(
     weighted_merge: bool = False,
     capacity_factor: float = 2.0,
     scale: bool = True,
-    assign_fn: AssignFn = assign_jnp,
+    backend: BackendSpec = None,
     restarts: int = 4,
 ) -> SampledClusteringResult:
     """Two-level sampled clustering (the paper's full method).
@@ -90,7 +92,7 @@ def sampled_kmeans(
     k_local = max(1, cap // compression)
 
     local = local_stage(parts, part_w, k_local, iters=local_iters,
-                        key=key_local, init=init, assign_fn=assign_fn)
+                        key=key_local, init=init, backend=backend)
 
     d = x.shape[-1]
     local_centers = local.centers.reshape(n_sub * k_local, d)
@@ -98,7 +100,7 @@ def sampled_kmeans(
     merge_w = local_counts if weighted_merge else (local_counts > 0).astype(x.dtype)
 
     merged = kmeans(local_centers, k, weights=merge_w, iters=global_iters,
-                    key=key_global, init=init, assign_fn=assign_fn,
+                    key=key_global, init=init, backend=backend,
                     restarts=restarts)
 
     centers = merged.centers
@@ -112,15 +114,15 @@ def sampled_kmeans(
 
 def standard_kmeans(
     x: Array, k: int, *, iters: int = 25, key: Optional[Array] = None,
-    init: str = "kmeans++", scale: bool = True, assign_fn: AssignFn = assign_jnp,
-    restarts: int = 4,
+    init: str = "kmeans++", scale: bool = True,
+    backend: BackendSpec = None, restarts: int = 4,
 ) -> SampledClusteringResult:
     """The baseline the paper compares against (plain Lloyd on all points),
     wrapped to return the same result type."""
     if key is None:
         key = jax.random.PRNGKey(0)
     xs, params = feature_scale(x) if scale else (x, None)
-    res = kmeans(xs, k, iters=iters, key=key, init=init, assign_fn=assign_fn,
+    res = kmeans(xs, k, iters=iters, key=key, init=init, backend=backend,
                  restarts=restarts)
     centers = unscale(res.centers, params) if scale else res.centers
     return SampledClusteringResult(

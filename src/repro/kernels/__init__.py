@@ -2,6 +2,8 @@
 
   assign.py    — k-means assignment (tiled distance + running argmin)
   centroid.py  — weighted centroid update (one-hot MXU segment-sum)
+  lloyd.py     — FUSED Lloyd step: assignment + weighted accumulation + SSE
+                 in one pass over x (see repro.core.backend for selection)
   cluster_attn.py — decode attention over clustered KV centroids
   ops.py       — jit'd public wrappers (padding, dtype plumbing)
   ref.py       — pure-jnp oracles
@@ -24,7 +26,7 @@ def default_interpret() -> bool:
 
 
 from .ops import (assign_argmin, centroid_update, cluster_attn_decode,
-                  pallas_assign_fn)  # noqa: E402
+                  lloyd_step, pad_to, pallas_assign_fn)  # noqa: E402
 
 __all__ = ["default_interpret", "assign_argmin", "centroid_update",
-           "cluster_attn_decode", "pallas_assign_fn"]
+           "cluster_attn_decode", "lloyd_step", "pad_to", "pallas_assign_fn"]

@@ -1,0 +1,150 @@
+"""Fused Lloyd-step Pallas kernel: assignment + weighted centroid
+accumulation in ONE pass over the points.
+
+The unfused path (assign.py + centroid.py) walks ``x`` twice per Lloyd
+iteration and materialises the (M,) assignment in HBM between the two
+kernels.  Here a single grid fuses both halves — the register-resident
+running-best trick of the paper's CUDA kernel, extended with the
+single-pass sufficient-statistics aggregation of Scalable K-Means++
+(arXiv:1203.6402):
+
+  * grid = (M tiles, K tiles), K minor.  Per M-tile the kernel walks the
+    K tiles sequentially carrying a running (min distance, argmin) pair in
+    the per-tile output VMEM blocks (assign.py's idiom, unchanged);
+  * on the *last* K tile the winner is final, so the kernel immediately
+    folds the tile into the (K, d) ``sums`` / (K, 1) ``counts`` VMEM
+    accumulators via a weighted one-hot matmul on the MXU — the assignment
+    and the one-hot matrix never round-trip through HBM;
+  * the weighted SSE contribution ``sum(best_dist * w)`` is accumulated in
+    the same place, so one pass yields everything a Lloyd iteration needs;
+  * distances and accumulation are fp32 regardless of the input dtype
+    (bf16 inputs are upcast tile-by-tile in VMEM).
+
+Inputs must be padded (M to block_m, d to 128) by the caller — the
+``LloydBackend`` registry in :mod:`repro.core.backend` pads once per
+``kmeans()`` call, outside the iteration loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_BIG = 3.0e38  # ~f32 max; masks padded center columns out of the argmin
+
+
+def _lloyd_kernel(x_ref, w_ref, c_ref, idx_ref, dist_ref, sums_ref,
+                  counts_ref, sse_ref, *, block_k: int, k_actual: int,
+                  nk: int):
+    i = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when((i == 0) & (ki == 0))
+    def _zero_accumulators():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        sse_ref[...] = jnp.zeros_like(sse_ref)
+
+    x = x_ref[...].astype(jnp.float32)                    # (bm, d)
+    c = c_ref[...].astype(jnp.float32)                    # (bk, d)
+    x2 = jnp.sum(x * x, axis=-1, keepdims=True)           # (bm, 1)
+    c2 = jnp.sum(c * c, axis=-1)[None, :]                 # (1, bk)
+    xc = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(x2 + c2 - 2.0 * xc, 0.0)             # (bm, bk)
+
+    col = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    d2 = jnp.where(col < k_actual, d2, _BIG)
+
+    local_min = jnp.min(d2, axis=-1)                      # (bm,)
+    local_arg = (ki * block_k
+                 + jnp.argmin(d2, axis=-1).astype(jnp.int32))
+
+    @pl.when(ki == 0)
+    def _init_best():
+        dist_ref[...] = local_min
+        idx_ref[...] = local_arg
+
+    @pl.when(ki > 0)
+    def _update_best():
+        best = dist_ref[...]
+        better = local_min < best
+        dist_ref[...] = jnp.where(better, local_min, best)
+        idx_ref[...] = jnp.where(better, local_arg, idx_ref[...])
+
+    @pl.when(ki == nk - 1)
+    def _accumulate():
+        # the running best is final for this M tile: fold it into the
+        # (K, d) VMEM accumulators right here — no HBM round-trip
+        w = w_ref[...].astype(jnp.float32)                # (bm, 1)
+        idx = idx_ref[...]                                # (bm,)
+        best = dist_ref[...]                              # (bm,)
+        kp = sums_ref.shape[0]
+        cols = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], kp), 1)
+        onehot = jnp.where(cols == idx[:, None], 1.0, 0.0) * w  # (bm, kp)
+        sums_ref[...] += jax.lax.dot_general(
+            onehot, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)           # (kp, d)
+        counts_ref[...] += jnp.sum(onehot, axis=0, keepdims=True).T
+        sse_ref[...] = sse_ref[...] + jnp.sum(best * w[:, 0])
+
+
+def lloyd_step_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    c: jax.Array,
+    *,
+    block_m: int = 256,
+    block_k: int = 256,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One fused Lloyd pass: (M, d) points, (M,) weights, (K, d) centers ->
+    (sums (K, d) f32, counts (K,) f32, sse () f32, idx (M,) i32,
+    dist (M,) f32).
+
+    ``sums``/``counts`` are the *raw* weighted per-cluster statistics (the
+    caller divides and applies the empty-cluster fix-up), so the same
+    primitive serves the single-device loop and the distributed merge
+    (psum the raw stats, then divide).  M must be a multiple of block_m and
+    d a multiple of 128 (pad with w=0 rows); ragged K is masked in-kernel.
+    """
+    from . import default_interpret
+    if interpret is None:
+        interpret = default_interpret()
+    m, d = x.shape
+    k = c.shape[0]
+    assert m % block_m == 0, (m, block_m)
+    block_k = min(block_k, -(-k // 8) * 8)
+    kp = -(-k // block_k) * block_k
+    if kp != k:
+        c = jnp.pad(c, ((0, kp - k), (0, 0)))
+    nk = kp // block_k
+    grid = (m // block_m, nk)
+
+    idx, dist, sums, counts, sse = pl.pallas_call(
+        functools.partial(_lloyd_kernel, block_k=block_k, k_actual=k, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((block_m,), lambda i, j: (i,)),
+            pl.BlockSpec((kp, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((kp, 1), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((kp, d), jnp.float32),
+            jax.ShapeDtypeStruct((kp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w.reshape(m, 1), c)
+    return sums[:k], counts[:k, 0], sse[0, 0], idx, dist

@@ -1,6 +1,12 @@
-"""jit'd public wrappers around the Pallas kernels: shape padding, dtype
-plumbing, and the ``assign_fn`` adapter that drops the kernels into
-:func:`repro.core.kmeans.kmeans`."""
+"""jit'd public wrappers around the Pallas kernels: shape padding and dtype
+plumbing for one-off calls.
+
+These wrappers pad on every invocation, which is fine for a single call but
+a per-iteration tax inside a Lloyd loop — the ``LloydBackend`` registry in
+:mod:`repro.core.backend` hoists the padding out of the loop (one
+``prepare()`` per ``kmeans()`` call) and is what every k-means call site
+routes through.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,10 +16,20 @@ import jax.numpy as jnp
 
 from .assign import assign_argmin_pallas
 from .centroid import centroid_update_pallas
+from .lloyd import lloyd_step_pallas
 
 
-def _pad_to(n: int, mult: int) -> int:
+def pad_to(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= ``n``."""
     return -(-n // mult) * mult
+
+
+def padded_layout(m: int, d: int, block_m: int) -> tuple[int, int, int]:
+    """The kernels' shared alignment rule, in one place: clamp ``block_m``
+    to the 8-sublane minimum, pad M to whole blocks and d to the 128-lane
+    tile.  Returns (bm, mp, dp)."""
+    bm = min(block_m, pad_to(m, 8))
+    return bm, pad_to(m, bm), pad_to(d, 128)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
@@ -22,13 +38,11 @@ def assign_argmin(x, c, *, block_m: int = 256, block_k: int = 256,
     """Nearest-center assignment for arbitrary (M, d), (K, d)."""
     m, d = x.shape
     k = c.shape[0]
-    bm = min(block_m, _pad_to(m, 8))
-    mp = _pad_to(m, bm)
-    dp = _pad_to(d, 128)
+    bm, mp, dp = padded_layout(m, d, block_m)
     xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
     cp = jnp.pad(c, ((0, 0), (0, dp - d)))
     idx, dist = assign_argmin_pallas(xp, cp, block_m=bm,
-                                     block_k=min(block_k, _pad_to(k, 8)),
+                                     block_k=min(block_k, pad_to(k, 8)),
                                      interpret=interpret)
     return idx[:m], dist[:m]
 
@@ -38,9 +52,7 @@ def centroid_update(x, idx, w, k: int, *, block_m: int = 512,
                     interpret: bool | None = None):
     """Weighted per-cluster sums/counts for arbitrary M."""
     m, d = x.shape
-    bm = min(block_m, _pad_to(m, 8))
-    mp = _pad_to(m, bm)
-    dp = _pad_to(d, 128)
+    bm, mp, dp = padded_layout(m, d, block_m)
     xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
     idxp = jnp.pad(idx, (0, mp - m))
     wp = jnp.pad(w, (0, mp - m))  # zero weight => padded rows contribute nothing
@@ -49,8 +61,24 @@ def centroid_update(x, idx, w, k: int, *, block_m: int = 512,
     return sums[:, :d], counts
 
 
+@functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))
+def lloyd_step(x, w, c, *, block_m: int = 256, block_k: int = 256,
+               interpret: bool | None = None):
+    """One fused Lloyd pass for arbitrary (M, d), (K, d): returns
+    (sums (K, d), counts (K,), sse (), idx (M,), dist (M,))."""
+    m, d = x.shape
+    bm, mp, dp = padded_layout(m, d, block_m)
+    xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+    wp = jnp.pad(w, (0, mp - m))
+    cp = jnp.pad(c, ((0, 0), (0, dp - d)))
+    sums, counts, sse, idx, dist = lloyd_step_pallas(
+        xp, wp, cp, block_m=bm, block_k=block_k, interpret=interpret)
+    return sums[:, :d], counts, sse, idx[:m], dist[:m]
+
+
 def pallas_assign_fn(x, c):
-    """Drop-in ``assign_fn`` for :func:`repro.core.kmeans.kmeans`."""
+    """Drop-in legacy ``assign_fn`` for :func:`repro.core.kmeans.kmeans`
+    (prefer ``backend="pallas"`` / ``"pallas_fused"``)."""
     return assign_argmin(x, c)
 
 

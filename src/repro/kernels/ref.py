@@ -26,6 +26,18 @@ def centroid_update_ref(
     return onehot.T @ x, onehot.sum(axis=0)
 
 
+def lloyd_step_ref(
+    x: jax.Array, w: jax.Array, c: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Oracle for the fused Lloyd step: raw weighted per-cluster sums /
+    counts, weighted SSE, and the assignment itself (all fp32)."""
+    idx, mind = assign_argmin_ref(x, c)
+    k = c.shape[0]
+    sums, counts = centroid_update_ref(x, idx, w, k)
+    sse = jnp.sum(mind * w.astype(jnp.float32))
+    return sums, counts, sse, idx, mind
+
+
 def cluster_attn_decode_ref(
     q: jax.Array,        # (h, dh)
     kc: jax.Array,       # (hkv, n, dh) centroid keys

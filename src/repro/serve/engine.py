@@ -32,6 +32,8 @@ class ServeConfig:
     recompress_every: int = 0       # 0 = never (window ring handles recency)
     recompress_iters: int = 4       # Lloyd iters per incremental refresh
     temperature: float = 0.0        # 0 = greedy
+    kmeans_backend: str = "auto"    # LloydBackend for the recompression
+                                    # k-means (repro.core.backend)
 
 
 class ServeEngine:
@@ -53,8 +55,11 @@ class ServeEngine:
             raise ValueError(
                 f"recompress_every={every} exceeds cluster_window="
                 f"{shape.cluster_window}: tokens would be evicted unfolded")
+        from repro.core.backend import get_backend
         self._refresh = jax.jit(functools.partial(
-            refresh_layer_cache, iters=self.scfg.recompress_iters))
+            refresh_layer_cache, iters=self.scfg.recompress_iters,
+            backend=get_backend(self.scfg.kmeans_backend)))
+        self._n_generate_calls = 0
 
     def _refresh_tree(self, c, last):
         """Recurse through a cache dict refreshing every clustered sub-cache
@@ -95,12 +100,18 @@ class ServeEngine:
     def generate(self, tokens: jax.Array, max_tokens: Optional[int] = None,
                  key=None):
         max_tokens = max_tokens or self.scfg.max_tokens
+        if key is None and self.scfg.temperature > 0:
+            # fresh key per call: folding a call counter into a fixed root
+            # keeps repeated generate() calls reproducible as a *sequence*
+            # without every call sampling the identical tokens
+            self._n_generate_calls += 1
+            key = jax.random.fold_in(jax.random.PRNGKey(0),
+                                     self._n_generate_calls)
         caches, logits, pos = self.prefill(tokens)
         out = []
         B = tokens.shape[0]
         for t in range(max_tokens):
             if self.scfg.temperature > 0:
-                key = key if key is not None else jax.random.PRNGKey(0)
                 key, sub = jax.random.split(key)
                 nxt = jax.random.categorical(
                     sub, logits[:, -1].astype(jnp.float32)

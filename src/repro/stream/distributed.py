@@ -26,18 +26,18 @@ def make_sharded_update(clusterer: StreamingClusterer,
     partition landmarks are shard-local, mirroring the chunk-local scaling
     of the single-device path)."""
     cfg = clusterer.cfg
-    assign_fn = clusterer.assign_fn
+    backend = clusterer.backend
 
     def per_device(state: StreamState, chunk: jax.Array) -> StreamState:
         key_local, key_merge, key_next = jax.random.split(state.key, 3)
         my = jax.lax.axis_index(axis)
         lc, lw = summarize_chunk(chunk, cfg,
-                                 jax.random.fold_in(key_local, my), assign_fn)
+                                 jax.random.fold_in(key_local, my), backend)
         all_c = jax.lax.all_gather(lc, axis, tiled=True)
         all_w = jax.lax.all_gather(lw, axis, tiled=True)
         n_pts = jax.lax.psum(jnp.asarray(chunk.shape[0], jnp.float32), axis)
         new = fold_and_merge(state, all_c, all_w, n_pts, cfg, key_merge,
-                             assign_fn)
+                             backend)
         return new._replace(key=key_next)
 
     mapped = compat.shard_map(

@@ -34,7 +34,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.kmeans import AssignFn, assign_jnp, kmeans, pairwise_sqdist
+from repro.core.backend import BackendSpec, LloydBackend, get_backend
+from repro.core.kmeans import kmeans, pairwise_sqdist
 from repro.core.metrics import sse as sse_fn
 from repro.core.pipeline import local_stage
 from repro.core.subcluster import (equal_partition, feature_scale,
@@ -68,10 +69,11 @@ class StreamConfig:
     decay: float = 0.97            # per-update weight multiplier
     reseed_threshold: float = 1e-6 # coreset support below this = dead center
     init_mode: str = "kmeans++"    # local-stage init
+    backend: str = "auto"          # LloydBackend name (repro.core.backend)
 
 
 def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
-                    assign_fn: AssignFn = assign_jnp) -> tuple[Array, Array]:
+                    backend: BackendSpec = None) -> tuple[Array, Array]:
     """Chunk -> (weighted local centers, weights): the paper's local stage.
 
     The chunk is feature-scaled on its own min/max (the partition landmarks
@@ -89,7 +91,8 @@ def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
     parts, part_w = gather_partitions(xs, part)
     k_local = max(1, parts.shape[1] // cfg.compression)
     local = local_stage(parts, part_w, k_local, iters=cfg.local_iters,
-                        key=key, init=cfg.init_mode, assign_fn=assign_fn)
+                        key=key, init=cfg.init_mode,
+                        backend=backend if backend is not None else cfg.backend)
     d = chunk.shape[-1]
     centers = unscale(local.centers.reshape(-1, d), params)
     weights = local.counts.reshape(-1)
@@ -139,7 +142,7 @@ def reseed_dead_centers(centers: Array, coreset: Array, coreset_w: Array,
 
 def fold_and_merge(state: StreamState, new_pts: Array, new_w: Array,
                    n_new_points: Array, cfg: StreamConfig,
-                   key: Array, assign_fn: AssignFn = assign_jnp
+                   key: Array, backend: BackendSpec = None
                    ) -> StreamState:
     """Global half of an update: coreset fold + reseed + warm-started merge.
     Runs replicated under shard_map (inputs already gathered)."""
@@ -149,7 +152,7 @@ def fold_and_merge(state: StreamState, new_pts: Array, new_w: Array,
                                cfg.reseed_threshold)
     merged = kmeans(coreset, cfg.k, weights=coreset_w,
                     iters=cfg.merge_iters, key=key, init=warm,
-                    assign_fn=assign_fn)
+                    backend=backend if backend is not None else cfg.backend)
     return StreamState(
         centers=merged.centers,
         coreset=coreset,
@@ -176,9 +179,11 @@ class StreamingClusterer:
     """
 
     def __init__(self, cfg: StreamConfig, *,
-                 assign_fn: AssignFn = assign_jnp, jit: bool = True):
+                 backend: BackendSpec = None, jit: bool = True):
         self.cfg = cfg
-        self.assign_fn = assign_fn
+        # resolve once (env/auto) so update/query/shard_map share one backend
+        self.backend: LloydBackend = get_backend(
+            backend if backend is not None else cfg.backend)
         wrap = jax.jit if jit else (lambda f: f)
         self.update = wrap(self._update)
         self.query = wrap(self._query)
@@ -201,13 +206,13 @@ class StreamingClusterer:
     # -- pure update / query ----------------------------------------------
     def _update(self, state: StreamState, chunk: Array) -> StreamState:
         key_local, key_merge, key_next = jax.random.split(state.key, 3)
-        lc, lw = summarize_chunk(chunk, self.cfg, key_local, self.assign_fn)
+        lc, lw = summarize_chunk(chunk, self.cfg, key_local, self.backend)
         state = fold_and_merge(state, lc, lw,
                                jnp.asarray(chunk.shape[0], jnp.float32),
-                               self.cfg, key_merge, self.assign_fn)
+                               self.cfg, key_merge, self.backend)
         return state._replace(key=key_next)
 
     def _query(self, state: StreamState, x: Array) -> tuple[Array, Array]:
         """Assign points to the current centers; returns (assignment, sse)."""
-        idx, _ = self.assign_fn(x, state.centers)
+        idx, _ = self.backend.assign_points(x, state.centers)
         return idx, sse_fn(x, state.centers)

@@ -21,6 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans, update_centers
 
 Array = jax.Array
@@ -28,7 +29,8 @@ Array = jax.Array
 
 def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
                             wk: Array, wv: Array, w_valid: Array,
-                            *, iters: int = 4, key: Array | None = None
+                            *, iters: int = 4, key: Array | None = None,
+                            backend: BackendSpec = None
                             ) -> tuple[Array, Array, Array]:
     """Fold window keys/values into the centroid set.
 
@@ -45,6 +47,7 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
     """
     if key is None:
         key = jax.random.PRNGKey(0)
+    be = get_backend(backend)
     n, dh = kc.shape[-2:]
     W = wk.shape[-2]
     batch = kc.shape[:-2]
@@ -62,7 +65,8 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
         pts = jnp.concatenate([kc1, wk1], axis=0)
         vals = jnp.concatenate([vc1, wv1], axis=0)
         w = jnp.concatenate([cnt1, val1], axis=0)
-        res = kmeans(pts, n, weights=w, iters=iters, key=kk, init=kc1)
+        res = kmeans(pts, n, weights=w, iters=iters, key=kk, init=kc1,
+                     backend=be)
         new_vc, new_cnt = update_centers(vals, w, res.assignment, n, vc1)
         return res.centers, new_vc, new_cnt
 
@@ -73,7 +77,8 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
 
 
 def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
-                        key: Array | None = None) -> dict:
+                        key: Array | None = None,
+                        backend: BackendSpec = None) -> dict:
     """Refresh a stacked clustered cache dict as built by
     ``init_clustered_cache``: kc/vc (L, B, kv, n, dh), counts (L, B, kv, n),
     wk/wv (L, B, kv, W, dh), slot_pos (L, W).  ``pos`` is the *position of
@@ -89,6 +94,6 @@ def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
     v4 = jnp.broadcast_to(v4, cache["counts"].shape[:3] + (window,))
     kc, vc, counts = refresh_clustered_cache(
         cache["kc"], cache["vc"], cache["counts"],
-        cache["wk"], cache["wv"], v4, iters=iters, key=key)
+        cache["wk"], cache["wv"], v4, iters=iters, key=key, backend=backend)
     return dict(cache, kc=kc, vc=vc, counts=counts,
                 slot_pos=jnp.full_like(cache["slot_pos"], -1))

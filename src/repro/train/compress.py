@@ -19,17 +19,20 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans
 
 
-def quantize_leaf(g: jax.Array, levels: int, key) -> tuple[jax.Array, dict]:
+def quantize_leaf(g: jax.Array, levels: int, key,
+                  backend: BackendSpec = None) -> tuple[jax.Array, dict]:
     """-> (dequantized g, {codebook, indices-free stats}).  1-D k-means on a
     value sample (equal-sized subclustering over the sorted sample = the
     paper's Algorithm 1 in one dimension)."""
     flat = g.reshape(-1, 1).astype(jnp.float32)
     n = flat.shape[0]
     samp = flat[:: max(1, n // 4096)][:4096]
-    res = kmeans(samp, levels, iters=8, key=key, init="landmark")
+    res = kmeans(samp, levels, iters=8, key=key, init="landmark",
+                 backend=backend)
     code = res.centers[:, 0]                       # (levels,)
     idx = jnp.argmin(jnp.abs(flat - code[None, :]), axis=-1)
     deq = code[idx].reshape(g.shape)
@@ -37,8 +40,9 @@ def quantize_leaf(g: jax.Array, levels: int, key) -> tuple[jax.Array, dict]:
 
 
 def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
-                         seed: int = 0):
+                         seed: int = 0, backend: BackendSpec = None):
     """Returns (compress_fn(grads, residual) -> (grads', residual'), init_residual)."""
+    be = get_backend(backend)
 
     def compress(grads, residual=None):
         leaves, treedef = jax.tree.flatten(grads)
@@ -48,7 +52,7 @@ def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
         for i, (g, r) in enumerate(zip(leaves, res_leaves)):
             gc = g + r if error_feedback else g
             key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
-            deq, _ = quantize_leaf(gc, levels, key)
+            deq, _ = quantize_leaf(gc, levels, key, backend=be)
             out.append(deq)
             new_res.append((gc - deq) if error_feedback else r)
         return (jax.tree.unflatten(treedef, out),

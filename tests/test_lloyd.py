@@ -1,0 +1,206 @@
+"""Fused Lloyd-step kernel vs the jnp oracle, the LloydBackend registry,
+and the k-means init/restart regressions that ride along with it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (available_backends, get_backend, kmeans,
+                        random_init, register_backend)
+from repro.core.backend import ENV_VAR, LloydBackend, PallasFusedBackend
+from repro.kernels import lloyd_step
+from repro.kernels.ref import lloyd_step_ref
+
+# ragged M / d / K on purpose: padding, K-tile masking, and the in-kernel
+# one-hot all have to agree with the oracle off the aligned path
+SHAPES = [(64, 4, 3), (257, 16, 7), (100, 33, 17), (512, 128, 300),
+          (1024, 2, 128)]
+
+
+@pytest.mark.parametrize("m,d,k", SHAPES)
+def test_fused_lloyd_step_sweep(rng, m, d, k):
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    sums, counts, sse, idx, dist = lloyd_step(x, w, c)
+    rsums, rcounts, rsse, ridx, rdist = lloyd_step_ref(x, w, c)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rcounts),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(sse), float(rsse), rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(dist), np.asarray(rdist),
+                               rtol=1e-4, atol=1e-4)
+    # argmin ties can break differently under reordered arithmetic
+    assert (np.asarray(idx) == np.asarray(ridx)).mean() > 0.99
+
+
+def test_fused_lloyd_step_zero_weight_rows_excluded(rng):
+    """Rows with w=0 (capacity padding) contribute to no statistic."""
+    m, d, k = 96, 5, 6
+    x = np.asarray(rng.normal(size=(m, d)), np.float32)
+    x[m // 2:] = 1e4  # junk that would wreck sums/sse if counted
+    w = np.concatenate([np.ones(m // 2), np.zeros(m - m // 2)]).astype(np.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    sums, counts, sse, _, _ = lloyd_step(jnp.asarray(x), jnp.asarray(w), c)
+    rsums, rcounts, rsse, _, _ = lloyd_step_ref(
+        jnp.asarray(x[:m // 2]), jnp.asarray(w[:m // 2]), c)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rcounts),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(sse), float(rsse), rtol=1e-4)
+
+
+def test_fused_lloyd_step_bf16_inputs(rng):
+    """bf16 points/centers accumulate in fp32 inside the kernel."""
+    m, d, k = 200, 9, 11
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.bfloat16)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.bfloat16)
+    w = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    sums, counts, sse, _, _ = lloyd_step(x, w, c)
+    rsums, rcounts, rsse, _, _ = lloyd_step_ref(x, w, c)
+    assert sums.dtype == jnp.float32 and counts.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=5e-2, atol=5e-2)
+    np.testing.assert_allclose(np.asarray(counts), np.asarray(rcounts),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(sse), float(rsse), rtol=5e-2)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(4, 150), d=st.integers(1, 40), k=st.integers(1, 20),
+       seed=st.integers(0, 2 ** 30))
+def test_property_fused_lloyd_any_shape(m, d, k, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+    c = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0, 1, m), jnp.float32)
+    sums, counts, sse, idx, _ = lloyd_step(x, w, c)
+    rsums, rcounts, rsse, _, _ = lloyd_step_ref(x, w, c)
+    np.testing.assert_allclose(np.asarray(sums), np.asarray(rsums),
+                               rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(sse), float(rsse), rtol=1e-3)
+    assert int(jnp.max(idx)) < k
+
+
+@pytest.mark.parametrize("backend", ["pallas", "pallas_fused"])
+def test_kmeans_multi_iter_matches_jnp_backend(rng, backend):
+    """A full Lloyd run through the Pallas backends lands on the same
+    centers as the jnp reference (same deterministic init)."""
+    x = jnp.asarray(rng.normal(size=(220, 6)), jnp.float32)
+    ref = kmeans(x, 5, iters=12, init="landmark", backend="jnp")
+    res = kmeans(x, 5, iters=12, init="landmark", backend=backend)
+    np.testing.assert_allclose(np.asarray(res.centers),
+                               np.asarray(ref.centers), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(float(res.sse), float(ref.sse), rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(res.counts),
+                               np.asarray(ref.counts), rtol=1e-3, atol=1e-3)
+
+
+def test_kmeans_fused_weighted_masked_points(rng):
+    """Zero-weight points are invisible to the fused backend too."""
+    x = np.asarray(rng.normal(size=(120, 3)), np.float32)
+    x[60:] += 100.0
+    w = np.concatenate([np.ones(60), np.zeros(60)]).astype(np.float32)
+    res = kmeans(jnp.asarray(x), 3, weights=jnp.asarray(w), iters=15,
+                 key=jax.random.PRNGKey(1), backend="pallas_fused")
+    assert np.abs(np.asarray(res.centers)).max() < 10.0
+
+
+# ---------------------------------------------------------------------------
+# registry behaviour
+# ---------------------------------------------------------------------------
+
+def test_backend_registry_names_and_errors():
+    assert {"jnp", "pallas", "pallas_fused", "auto"} <= set(available_backends())
+    assert get_backend("jnp").name == "jnp"
+    assert isinstance(get_backend("pallas_fused"), PallasFusedBackend)
+    inst = PallasFusedBackend(block_m=128)
+    assert get_backend(inst) is inst
+    with pytest.raises(ValueError, match="unknown k-means backend"):
+        get_backend("cuda")
+
+
+def test_backend_env_var_steers_auto(monkeypatch):
+    monkeypatch.setenv(ENV_VAR, "pallas_fused")
+    assert get_backend(None).name == "pallas_fused"
+    assert get_backend("auto").name == "pallas_fused"
+    # an explicit in-code choice still wins over the env var
+    assert get_backend("jnp").name == "jnp"
+    monkeypatch.delenv(ENV_VAR)
+    assert get_backend(None).name in ("jnp", "pallas_fused")  # hw autodetect
+
+
+def test_register_custom_backend():
+    class Tagged(LloydBackend):
+        name = "tagged"
+
+    register_backend("tagged", Tagged)
+    try:
+        assert get_backend("tagged").name == "tagged"
+    finally:
+        from repro.core import backend as backend_mod
+        backend_mod._REGISTRY.pop("tagged")
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: restarts with array init, sampling w/o replacement
+# ---------------------------------------------------------------------------
+
+def test_restarts_with_array_init_not_ignored(blob_data):
+    """restarts>1 with an explicit (degenerate) array init must actually
+    restart — previously it silently collapsed to a single run."""
+    pts, _, _ = blob_data
+    x = jnp.asarray(pts)
+    degenerate = jnp.tile(jnp.mean(x, axis=0, keepdims=True), (4, 1))
+    r1 = kmeans(x, 4, iters=20, init=degenerate, restarts=1)
+    r4 = kmeans(x, 4, iters=20, init=degenerate, restarts=4,
+                key=jax.random.PRNGKey(3))
+    # with every center on the data mean, a single run leaves k-1 clusters
+    # dead; jittered restarts split them apart
+    assert float(r4.sse) < 0.9 * float(r1.sse)
+    assert int((r4.counts > 0).sum()) > int((r1.counts > 0).sum())
+
+
+def test_restart_zero_keeps_array_init_verbatim(blob_data):
+    """Warm-start contract: restart 0 runs from the given centers exactly
+    (the streaming merge and KV refresh rely on this)."""
+    pts, _, _ = blob_data
+    x = jnp.asarray(pts)
+    warm = kmeans(x, 4, iters=20, key=jax.random.PRNGKey(0)).centers
+    again = kmeans(x, 4, iters=0, init=warm, restarts=1)
+    np.testing.assert_array_equal(np.asarray(again.centers), np.asarray(warm))
+
+
+def test_random_init_samples_without_replacement(rng):
+    """k centers drawn from m >= k weighted points must be distinct rows."""
+    m, k = 12, 8
+    x = jnp.asarray(rng.normal(size=(m, 2)), jnp.float32)
+    w = jnp.ones((m,), jnp.float32)
+    for seed in range(20):
+        centers = random_init(x, w, k, jax.random.PRNGKey(seed))
+        assert len(np.unique(np.asarray(centers), axis=0)) == k
+
+
+def test_random_init_fallback_when_too_few_valid(rng):
+    """Fewer positive-weight points than k: every center is still a valid
+    (unmasked) point."""
+    x = np.asarray(rng.normal(size=(10, 2)), np.float32)
+    x[3:] = 1e6  # masked junk
+    w = jnp.asarray(np.concatenate([np.ones(3), np.zeros(7)]), jnp.float32)
+    centers = np.asarray(random_init(jnp.asarray(x), w, 5,
+                                     jax.random.PRNGKey(0)))
+    assert np.abs(centers).max() < 100.0
+
+
+def test_random_init_respects_weights():
+    """Zero-weight points are never chosen even when k == #valid."""
+    x = jnp.asarray(np.arange(20, dtype=np.float32).reshape(10, 2))
+    w = jnp.asarray([1, 0, 1, 0, 1, 0, 1, 0, 1, 0], jnp.float32)
+    for seed in range(10):
+        centers = np.asarray(random_init(x, w, 5, jax.random.PRNGKey(seed)))
+        valid = np.asarray(x)[np.asarray(w) > 0]
+        for c in centers:
+            assert (c == valid).all(axis=-1).any()

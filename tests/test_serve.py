@@ -95,6 +95,25 @@ def test_serve_engine_greedy_deterministic():
     assert out1.shape == (2, 6)
 
 
+def test_serve_engine_sampling_fresh_key_per_call():
+    """temperature > 0 with key=None must not reuse PRNGKey(0) every call —
+    repeated generate() calls used to sample identical tokens."""
+    cfg = get_config("internlm2-20b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("s", 64, 2, "decode")
+    eng = ServeEngine(cfg, shape, params,
+                      ServeConfig(max_tokens=8, temperature=1.0))
+    prompt = jnp.ones((2, 4), jnp.int32)
+    out1 = eng.generate(prompt)
+    out2 = eng.generate(prompt)
+    assert not np.array_equal(out1, out2)
+    # an explicit key still gives reproducible draws
+    outa = eng.generate(prompt, key=jax.random.PRNGKey(7))
+    outb = eng.generate(prompt, key=jax.random.PRNGKey(7))
+    np.testing.assert_array_equal(outa, outb)
+
+
 def test_ssm_decode_long_context_state_bounded():
     """xlstm decode cache size is independent of seq_len (O(1) state)."""
     cfg = get_config("xlstm-1.3b").reduced()

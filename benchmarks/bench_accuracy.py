@@ -12,8 +12,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (clustering_accuracy, relative_error, sampled_kmeans,
-                        standard_kmeans)
+from repro.configs.paper_clustering import workload_spec
+from repro.core import relative_error, sampled_kmeans, standard_kmeans
 from repro.data.synthetic import surrogate_iris, surrogate_seeds
 
 
@@ -29,9 +29,9 @@ def run(csv):
         csv(f"table1/{name}/standard_kmeans", t_full * 1e6,
             f"sse={float(full.sse):.2f}")
         for scheme in ("equal", "unequal"):
+            spec = workload_spec(name, scheme=scheme)
             t0 = time.perf_counter()
-            s = sampled_kmeans(xj, k, scheme=scheme, n_sub=6, compression=6,
-                               key=jax.random.PRNGKey(0))
+            s = sampled_kmeans(xj, k, spec=spec, key=jax.random.PRNGKey(0))
             jax.block_until_ready(s.sse)
             dt = time.perf_counter() - t0
             rel = relative_error(float(s.sse), float(full.sse))

@@ -7,6 +7,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.configs.paper_clustering import COMPRESSION_SWEEP, workload_spec
 from repro.core import relative_error, sampled_kmeans, standard_kmeans
 from repro.data.synthetic import blobs
 
@@ -28,11 +29,11 @@ def run(csv):
     t_full = time.perf_counter() - t0
 
     rows = []
-    for c in (5, 10, 15, 20):
-        fn = jax.jit(lambda xx, _c=c: sampled_kmeans(
-            xx, k, scheme="equal", n_sub=N_SUB, compression=_c,
-            local_iters=ITERS, global_iters=ITERS,
-            key=jax.random.PRNGKey(0)).sse)
+    for c in COMPRESSION_SWEEP:
+        spec = workload_spec("synthetic_500k", compression=c,
+                             local_iters=ITERS, global_iters=ITERS)
+        fn = jax.jit(lambda xx, _s=spec: sampled_kmeans(
+            xx, k, spec=_s, key=jax.random.PRNGKey(0)).sse)
         fn(x)
         t0 = time.perf_counter()
         sse = fn(x)

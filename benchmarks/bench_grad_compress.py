@@ -14,6 +14,7 @@ from repro.configs import ShapeConfig, get_config
 from repro.data.synthetic import token_stream
 from repro.models.registry import build_model
 from repro.optim import AdamW
+from repro.core import ClusterSpec, MergeSpec
 from repro.train.compress import compressed_bytes, make_grad_compressor
 
 
@@ -36,7 +37,9 @@ def run(csv):
         opt = AdamW(lr=3e-3)
         p = model.init(jax.random.PRNGKey(0))
         st = opt.init(p)
-        comp = make_grad_compressor(levels=16)
+        # the codebook fit declared as a spec: 16 levels, landmark init
+        comp = make_grad_compressor(spec=ClusterSpec(
+            merge=MergeSpec(k=16, iters=8, init="landmark")))
         resid = None
         grad_fn = jax.jit(jax.value_and_grad(loss_fn))
         hist = []

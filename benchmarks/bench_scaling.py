@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.paper_clustering import workload_spec
 from repro.core import (relative_error, sampled_kmeans, standard_kmeans)
 from repro.core.pipeline import local_stage
 from repro.core.subcluster import equal_partition, feature_scale, gather_partitions
@@ -48,10 +49,10 @@ def run(csv):
         full_fn(x)  # compile
         full_sse, t_full = _timed(full_fn, x)
 
-        samp_fn = jax.jit(lambda xx: sampled_kmeans(
-            xx, k, scheme="equal", n_sub=N_SUB, compression=COMPRESSION,
-            local_iters=ITERS, global_iters=ITERS,
-            key=jax.random.PRNGKey(0)).sse)
+        spec = workload_spec(f"synthetic_{n // 1000}k",
+                             local_iters=ITERS, global_iters=ITERS)
+        samp_fn = jax.jit(lambda xx, _s=spec: sampled_kmeans(
+            xx, k, spec=_s, key=jax.random.PRNGKey(0)).sse)
         samp_fn(x)
         samp_sse, t_serial = _timed(samp_fn, x)
 

@@ -15,7 +15,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import relative_error, sampled_kmeans, sse
+from repro.core import ClusterSpec, relative_error, sampled_kmeans, sse
 from repro.data.synthetic import drifting_blobs
 from repro.stream import StreamConfig, StreamingClusterer
 
@@ -29,10 +29,13 @@ def run(csv):
     chunks, _, _ = drifting_blobs(N_CHUNKS, CHUNK, n_clusters=K, dim=DIM,
                                   seed=0, drift=0.02)
     rows = []
+    # local_iters/global_iters mirror StreamConfig's 8/8 defaults so the
+    # spec-built engine times the same work as before
+    spec = ClusterSpec.make(K, n_sub=16, compression=5,
+                            local_iters=8, global_iters=8)
     for decay, buffer_size in ((0.97, 2048), (0.90, 1024)):
-        sc = StreamingClusterer(StreamConfig(
-            k=K, n_sub=16, compression=5, decay=decay,
-            buffer_size=buffer_size))
+        sc = StreamingClusterer(StreamConfig.from_spec(
+            spec, decay=decay, buffer_size=buffer_size))
         state = sc.init(dim=DIM)
         state = sc.update(state, jnp.asarray(chunks[0]))  # warm-up/compile
         jax.block_until_ready(state.centers)
@@ -45,7 +48,9 @@ def run(csv):
         pts_per_sec = (N_CHUNKS - 1) * CHUNK / dt
 
         full = jnp.asarray(chunks.reshape(-1, DIM))
-        oracle = sampled_kmeans(full, K, n_sub=16, compression=5,
+        oracle = sampled_kmeans(full, K,
+                                spec=ClusterSpec.make(K, n_sub=16,
+                                                      compression=5),
                                 key=jax.random.PRNGKey(0))
         rel = relative_error(float(sse(full, state.centers)),
                              float(oracle.sse))

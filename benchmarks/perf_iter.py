@@ -21,7 +21,7 @@ it asserts numerics only.  Either way the figures land in
 import os
 import sys
 
-if "--lloyd" not in sys.argv:
+if "--lloyd" not in sys.argv and "--api" not in sys.argv:
     # the roofline cells pretend to be a 512-chip pod; the Lloyd bench wants
     # the real device so its timings mean something
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -245,8 +245,91 @@ def run_lloyd_bench(m: int, d: int, k: int, *, timing_iters: int = 5,
     return entry
 
 
+def run_api_bench(n: int, d: int, k: int, *, timing_iters: int = 5,
+                  max_overhead: float | None = 0.05) -> dict:
+    """Facade-overhead check: ``SampledKMeans(spec).fit`` vs calling
+    ``sampled_kmeans(spec=...)`` directly on the same data/key/spec.
+
+    Both run the identical ``fit_from_spec`` trace, so any delta is pure
+    host-side dispatch (plan + registry resolution).  Centers must agree
+    bit-for-bit; the median-time ratio lands in
+    ``benchmarks/artifacts/BENCH_api_N{n}_d{d}_K{k}.json`` and, when
+    ``max_overhead`` is set, is asserted to stay under it.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import SampledKMeans
+    from repro.core import sampled_kmeans
+    from repro.core.spec import ClusterSpec
+    from repro.data.synthetic import blobs
+
+    spec = ClusterSpec.make(k, n_sub=16, compression=5)
+    pts, _, _ = blobs(n, n_clusters=k, dim=d, seed=0)
+    x = jnp.asarray(pts)
+    key = jax.random.PRNGKey(0)
+
+    def direct():
+        return jax.block_until_ready(
+            sampled_kmeans(x, k, spec=spec, key=key).sse)
+
+    est = SampledKMeans(spec)
+
+    def facade():
+        return jax.block_until_ready(est.fit(x, key=key).sse_)
+
+    # parity first (also warms both paths)
+    r_direct = sampled_kmeans(x, k, spec=spec, key=key)
+    est.fit(x, key=key)
+    np.testing.assert_array_equal(np.asarray(r_direct.centers),
+                                  np.asarray(est.centers_))
+    assert float(r_direct.sse) == float(est.sse_)
+
+    def med(fn):
+        ts = []
+        for _ in range(timing_iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    t_direct, t_facade = med(direct), med(facade)
+    entry = {
+        "bench": "api_facade_overhead",
+        "shape": {"n": n, "d": d, "k": k},
+        "us_direct": t_direct * 1e6,
+        "us_facade": t_facade * 1e6,
+        "overhead": t_facade / t_direct - 1.0,
+        "bit_for_bit": True,
+    }
+    PERF.parent.mkdir(parents=True, exist_ok=True)
+    out = PERF.parent / f"BENCH_api_N{n}_d{d}_K{k}.json"
+    out.write_text(json.dumps(entry, indent=1))
+    entry["json"] = str(out)
+    if max_overhead is not None:
+        assert entry["overhead"] <= max_overhead, (
+            f"SampledKMeans facade {entry['overhead']:+.1%} over direct "
+            f"sampled_kmeans (allowed {max_overhead:+.1%})")
+    return entry
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    if "--api" in sys.argv:
+        ap.add_argument("--api", action="store_true")
+        ap.add_argument("--n", type=int, default=100_000)
+        ap.add_argument("--d", type=int, default=2)
+        ap.add_argument("--k", type=int, default=64)
+        ap.add_argument("--timing-iters", type=int, default=5)
+        ap.add_argument("--max-overhead", type=float, default=0.05,
+                        help="assert facade <= this fractional overhead "
+                             "over direct sampled_kmeans")
+        args = ap.parse_args()
+        e = run_api_bench(args.n, args.d, args.k,
+                          timing_iters=args.timing_iters,
+                          max_overhead=args.max_overhead)
+        print(json.dumps(e, indent=1))
+        sys.exit(0)
     if "--lloyd" in sys.argv:
         ap.add_argument("--lloyd", action="store_true")
         ap.add_argument("--m", type=int, default=262144)

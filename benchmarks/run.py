@@ -1,14 +1,54 @@
 """Benchmark harness — one module per paper table + framework benches.
 
   PYTHONPATH=src python -m benchmarks.run [--only table1,table2,...]
+  PYTHONPATH=src python -m benchmarks.run --spec benchmarks/specs/paper_500k.json
 
 Prints ``name,us_per_call,derived`` CSV lines.  Roofline numbers come from
 the dry-run artifacts (benchmarks/artifacts/dryrun/) via
 ``python -m benchmarks.roofline_report``.
+
+``--spec FILE`` runs one clustering benchmark from a *serialized spec*: the
+JSON holds a ``cluster_spec`` section (``ClusterSpec.to_dict()`` output —
+the single source of truth for every stage option) plus a ``workload``
+section sizing the synthetic data (``n``, ``dim``, optional ``seed``,
+``repeats``).  Benchmark configs are therefore the same artifact the
+library executes — no kwarg re-spelling between config and run.
 """
 import argparse
+import json
 import sys
 import time
+
+
+def run_spec_file(path: str, csv) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.api import SampledKMeans
+    from repro.core.spec import ClusterSpec
+    from repro.data.synthetic import blobs
+
+    payload = json.loads(open(path).read())
+    spec = ClusterSpec.from_dict(payload["cluster_spec"])
+    w = payload.get("workload", {})
+    n, dim = int(w.get("n", 100_000)), int(w.get("dim", 2))
+    seed, repeats = int(w.get("seed", 0)), int(w.get("repeats", 3))
+
+    pts, _, _ = blobs(n, n_clusters=spec.merge.k, dim=dim, seed=seed)
+    x = jnp.asarray(pts)
+    est = SampledKMeans(spec)
+    key = jax.random.PRNGKey(seed)
+    est.fit(x, key=key)                      # compile + warm
+    jax.block_until_ready(est.sse_)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        est.fit(x, key=key)
+        jax.block_until_ready(est.sse_)
+        times.append(time.perf_counter() - t0)
+    csv(f"spec/{payload.get('name', path)}", min(times) * 1e6,
+        f"sse={float(est.sse_):.2f};n={n};k={spec.merge.k};"
+        f"mode={est.plan(x.shape).mode}")
 
 
 def _csv(name, us, derived):
@@ -30,7 +70,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys to run")
+    ap.add_argument("--spec", default=None, metavar="FILE",
+                    help="run one clustering bench from a serialized "
+                         "ClusterSpec JSON (see benchmarks/specs/)")
     args = ap.parse_args()
+    if args.spec:
+        run_spec_file(args.spec, _csv)
+        return
     only = set(args.only.split(",")) if args.only else None
 
     import importlib

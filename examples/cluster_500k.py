@@ -35,8 +35,10 @@ def main():
     import jax
     import jax.numpy as jnp
     from repro import compat
+    from repro.api import SampledKMeans
+    from repro.configs.paper_clustering import workload_spec
     from repro.core import (make_distributed_sampled_kmeans, relative_error,
-                            sampled_kmeans, standard_kmeans)
+                            standard_kmeans)
     from repro.data.synthetic import blobs
 
     n = args.n
@@ -51,10 +53,11 @@ def main():
     t_full = time.perf_counter() - t0
     print(f"traditional k-means: {t_full:8.2f}s  sse={float(full.sse):.1f}")
 
+    spec = workload_spec("synthetic_500k", compression=args.compression,
+                         local_iters=10, global_iters=10)
+    spec = spec.replace(k=k) if k != spec.merge.k else spec
     t0 = time.perf_counter()
-    samp = sampled_kmeans(x, k, scheme="equal", n_sub=64,
-                          compression=args.compression, local_iters=10,
-                          global_iters=10, key=jax.random.PRNGKey(0))
+    samp = SampledKMeans(spec).fit(x, key=jax.random.PRNGKey(0)).result_
     jax.block_until_ready(samp.sse)
     t_s = time.perf_counter() - t0
     print(f"sampled (serial):    {t_s:8.2f}s  sse={float(samp.sse):.1f}  "
@@ -65,11 +68,10 @@ def main():
         from jax.sharding import NamedSharding, PartitionSpec as P
         mesh = compat.make_mesh((ndev,), ("data",))
         xd = jax.device_put(x[: n - n % ndev], NamedSharding(mesh, P("data")))
+        dist_spec = spec.replace(n_sub=max(1, 64 // ndev))
         for merge in ("replicated", "distributed"):
             fn = make_distributed_sampled_kmeans(
-                mesh, k, n_sub_per_device=max(1, 64 // ndev),
-                compression=args.compression, local_iters=10,
-                global_iters=10, merge=merge)
+                mesh, spec=dist_spec, merge=merge)
             res = fn(xd, jax.random.PRNGKey(0))
             jax.block_until_ready(res.sse)
             t0 = time.perf_counter()

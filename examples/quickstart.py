@@ -1,11 +1,14 @@
-"""Quickstart: the paper's parallel sampling-based clustering in 30 lines.
+"""Quickstart: the paper's parallel sampling-based clustering in 30 lines,
+through the declarative ClusterSpec + SampledKMeans facade.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import relative_error, sampled_kmeans, standard_kmeans
+from repro.api import SampledKMeans
+from repro.core import (ClusterSpec, LocalSpec, MergeSpec, PartitionSpec,
+                        relative_error, standard_kmeans)
 from repro.data.synthetic import blobs
 
 
@@ -17,16 +20,25 @@ def main():
     print(f"standard k-means        sse={float(full.sse):10.2f}")
 
     for scheme in ("equal", "unequal"):
-        res = sampled_kmeans(
-            x, 40,
-            scheme=scheme,        # Algorithm 1 or Algorithm 2
-            n_sub=16,             # subclusters (CUDA blocks in the paper)
-            compression=5,        # paper's c: each N-point subcluster
-                                  # is summarised by N/5 local centers
-            key=jax.random.PRNGKey(0))
+        spec = ClusterSpec(
+            partition=PartitionSpec(scheme=scheme,  # Algorithm 1 or 2
+                                    n_sub=16),      # subclusters (CUDA
+                                                    # blocks in the paper)
+            local=LocalSpec(compression=5),         # paper's c: N-point
+                                                    # subcluster -> N/5
+                                                    # local centers
+            merge=MergeSpec(k=40),
+        )
+        est = SampledKMeans(spec).fit(x, key=jax.random.PRNGKey(0))
+        res = est.result_
         rel = relative_error(float(res.sse), float(full.sse))
         print(f"sampled ({scheme:7s})     sse={float(res.sse):10.2f} "
               f"rel_err={rel:+.2%} local_centers={res.local_centers.shape[0]}")
+
+    # the estimator answers queries against the fitted centers
+    labels_hat = est.predict(x[:5])
+    print(f"predict(x[:5]) -> {labels_hat.tolist()}  "
+          f"score={float(est.score(x)):.1f}")
 
 
 if __name__ == "__main__":

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import sampled_kmeans
+from repro.core import ClusterSpec, sampled_kmeans
 from repro.data.synthetic import drifting_blobs
 from repro.stream import StreamConfig, StreamingClusterer
 
@@ -28,10 +28,13 @@ def main():
                                      n_clusters=k, dim=dim, seed=0,
                                      drift=0.08)
 
-    sc = StreamingClusterer(StreamConfig(k=k, n_sub=8, compression=5,
-                                         decay=0.9, buffer_size=1024))
+    spec = ClusterSpec.make(k, n_sub=8, compression=5,
+                            local_iters=8, global_iters=8)
+    sc = StreamingClusterer(StreamConfig.from_spec(spec, decay=0.9,
+                                                   buffer_size=1024))
     state = sc.init(dim=dim, key=jax.random.PRNGKey(0))
     frozen = sampled_kmeans(jnp.asarray(chunks[0]), k,
+                            spec=ClusterSpec.make(k),
                             key=jax.random.PRNGKey(0)).centers
 
     print(f"{'chunk':>5} {'stream_rmse':>12} {'frozen_rmse':>12}")

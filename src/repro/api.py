@@ -1,0 +1,250 @@
+"""`SampledKMeans` — the estimator facade over the paper's pipeline, with a
+plan/execute split.
+
+One declarative :class:`~repro.core.spec.ClusterSpec` drives every engine in
+the repo; :func:`plan` resolves it ONCE (execution mode, Lloyd backend,
+registry lookups) into an :class:`ExecutionPlan`, and :func:`execute` runs
+the plan:
+
+    from repro.api import SampledKMeans
+    from repro.core import ClusterSpec, MergeSpec, PartitionSpec
+
+    spec = ClusterSpec(merge=MergeSpec(k=40),
+                       partition=PartitionSpec(scheme="equal", n_sub=16))
+    est = SampledKMeans(spec).fit(x)        # == sampled_kmeans(x, spec=spec)
+    labels = est.predict(x)
+    for chunk in stream:                    # or: incremental
+        est.partial_fit(chunk)
+
+Execution modes (``spec.execution.mode``):
+
+  ``single``     the one-device vmap pipeline (`core.pipeline.fit_from_spec`)
+  ``shard_map``  the pod-scale mesh version (`core.distributed`) — pass
+                 ``mesh=`` to the estimator / planner
+  ``stream``     the incremental coreset engine (`stream.engine`); ``fit``
+                 feeds the data chunk-wise, ``partial_fit`` is one update
+  ``auto``       ``shard_map`` when a mesh is supplied, else ``single``
+
+``fit`` under ``single`` reproduces ``sampled_kmeans(x, spec=spec)``
+bit-for-bit under the same PRNG key: both run the identical
+``fit_from_spec`` trace.  The shard_map and stream paths are likewise the
+exact engines their direct entry points build — the facade adds dispatch,
+not computation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.backend import LloydBackend, get_backend
+from repro.core.kmeans import get_init, pairwise_sqdist
+from repro.core.pipeline import SampledClusteringResult, fit_from_spec
+from repro.core.spec import ClusterSpec
+from repro.core.subcluster import get_partitioner
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """A resolved spec: concrete mode, one backend instance, validated
+    registry entries.  Build with :func:`plan`, run with :func:`execute`."""
+    spec: ClusterSpec
+    mode: str                      # "single" | "shard_map" | "stream"
+    backend: LloydBackend          # resolved once, shared by every stage
+    mesh: Optional[jax.sharding.Mesh] = None
+    data_shape: Optional[tuple] = None
+
+    @property
+    def k(self) -> int:
+        return self.spec.merge.k
+
+
+def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
+         mesh: Optional[jax.sharding.Mesh] = None) -> ExecutionPlan:
+    """Resolve a declarative spec into an executable plan.
+
+    Validates every registry name (partitioner, init schemes, backend) up
+    front — a typo fails here with the known-names list, not deep inside a
+    jit trace — and picks the execution mode: an explicit
+    ``spec.execution.mode`` wins; ``"auto"`` selects ``shard_map`` when a
+    mesh is supplied and ``single`` otherwise.  ``data_shape`` (the (M, d)
+    of the points, when known) is recorded for downstream sizing and lets
+    the planner reject shard_map runs whose rows don't divide over the mesh.
+    """
+    # registry validation: fail fast, with the known-names list
+    get_partitioner(spec.partition.scheme)
+    get_init(spec.local.init)
+    get_init(spec.merge.init)
+    backend = get_backend(spec.execution.backend)
+
+    mode = spec.execution.mode
+    if mode == "auto":
+        mode = "shard_map" if mesh is not None else "single"
+    if mode == "shard_map":
+        if mesh is None:
+            raise ValueError("plan: mode='shard_map' needs a mesh= "
+                             "(see repro.compat.make_mesh)")
+        axis = spec.execution.mesh_axis
+        if axis not in mesh.axis_names:
+            raise ValueError(f"plan: mesh has no {axis!r} axis "
+                             f"(axes: {mesh.axis_names})")
+        if data_shape is not None:
+            n_dev = mesh.shape[axis]
+            if data_shape[0] % n_dev:
+                raise ValueError(
+                    f"plan: {data_shape[0]} rows do not divide over "
+                    f"{n_dev} devices along {axis!r}")
+    return ExecutionPlan(spec=spec, mode=mode, backend=backend, mesh=mesh,
+                         data_shape=data_shape)
+
+
+def execute(pl: ExecutionPlan, x: Array,
+            key: Optional[Array] = None) -> SampledClusteringResult:
+    """Run a plan on ``x``.  Single and shard_map modes are one-shot fits;
+    stream mode folds ``x`` through the incremental engine as one chunk
+    (use :class:`SampledKMeans.partial_fit` for true chunk-wise feeds)."""
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if pl.mode == "single":
+        fit = fit_from_spec
+        if pl.spec.execution.donate:
+            fit = jax.jit(fit_from_spec,
+                          static_argnames=("spec", "backend"),
+                          donate_argnums=0)
+        return fit(x, pl.spec, key, backend=pl.backend)
+    if pl.mode == "shard_map":
+        from repro.core.distributed import make_distributed_sampled_kmeans
+        fn = make_distributed_sampled_kmeans(pl.mesh, spec=pl.spec,
+                                             backend=pl.backend)
+        res = fn(x, key)
+        return SampledClusteringResult(
+            centers=res.centers, sse=res.sse, local_centers=res.local_centers,
+            local_weights=res.local_weights,
+            n_dropped=jnp.asarray(0, jnp.int32))
+    if pl.mode == "stream":
+        from repro.stream.engine import StreamConfig, StreamingClusterer
+        sc = StreamingClusterer(StreamConfig.from_spec(pl.spec),
+                                backend=pl.backend)
+        state = sc.init(dim=x.shape[-1], key=key, dtype=x.dtype)
+        state = sc.update(state, x)
+        _, total = sc.query(state, x)
+        return SampledClusteringResult(
+            centers=state.centers, sse=total, local_centers=state.coreset,
+            local_weights=state.coreset_w, n_dropped=jnp.asarray(0, jnp.int32))
+    raise ValueError(f"unknown plan mode {pl.mode!r}")
+
+
+class SampledKMeans:
+    """Estimator-style facade: one object, every execution mode.
+
+    Stateful in the sklearn sense (``fit`` populates ``centers_``, ``sse_``,
+    ``result_``; ``partial_fit`` keeps a live stream state) but every
+    underlying computation is the repo's pure-functional machinery.
+
+    Parameters
+    ----------
+    spec:        the declarative job (or an int — shorthand for
+                 ``ClusterSpec.make(k)``)
+    mesh:        optional device mesh; enables/steers shard_map mode
+    buffer_size, decay: stream-engine knobs used by ``partial_fit`` (and by
+                 ``fit`` under ``mode="stream"``)
+    """
+
+    def __init__(self, spec: ClusterSpec | int, *,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 buffer_size: int = 1024, decay: float = 0.97):
+        if isinstance(spec, int):
+            spec = ClusterSpec.make(spec)
+        self.spec = spec
+        self.mesh = mesh
+        self._stream_overrides = dict(buffer_size=buffer_size, decay=decay)
+        self._clusterer = None      # lazy StreamingClusterer for partial_fit
+        self._stream_state = None
+        self.result_: Optional[SampledClusteringResult] = None
+        self.centers_: Optional[Array] = None
+        self.sse_: Optional[Array] = None
+
+    # -- planning ---------------------------------------------------------
+    def plan(self, data_shape: Optional[tuple] = None) -> ExecutionPlan:
+        return plan(self.spec, data_shape, mesh=self.mesh)
+
+    @property
+    def backend(self) -> LloydBackend:
+        return self.plan().backend
+
+    # -- one-shot fit -----------------------------------------------------
+    def fit(self, x: Array, key: Optional[Array] = None) -> "SampledKMeans":
+        pl = self.plan(tuple(x.shape))
+        if pl.mode == "stream":
+            # honor the stream-only knobs by going through partial_fit
+            self._reset_stream()
+            return self.partial_fit(x, key=key)
+        self.result_ = execute(pl, x, key)
+        self.centers_ = self.result_.centers
+        self.sse_ = self.result_.sse
+        return self
+
+    def fit_predict(self, x: Array,
+                    key: Optional[Array] = None) -> Array:
+        return self.fit(x, key).predict(x)
+
+    # -- incremental fit --------------------------------------------------
+    def _reset_stream(self):
+        self._clusterer = None
+        self._stream_state = None
+
+    def partial_fit(self, chunk: Array,
+                    key: Optional[Array] = None) -> "SampledKMeans":
+        """Fold one chunk through the streaming engine (delegates to
+        :class:`repro.stream.StreamingClusterer`).  The first call
+        initialises the stream state; chunks must keep a fixed size (the
+        update is jit-compiled per shape)."""
+        from repro.stream.engine import StreamConfig, StreamingClusterer
+        if self._clusterer is None:
+            cfg = StreamConfig.from_spec(self.spec,
+                                         **self._stream_overrides)
+            self._clusterer = StreamingClusterer(cfg)
+            self._stream_state = self._clusterer.init(
+                dim=chunk.shape[-1], key=key, dtype=chunk.dtype)
+        self._stream_state = self._clusterer.update(self._stream_state,
+                                                    chunk)
+        self.centers_ = self._stream_state.centers
+        self.sse_ = None   # stale until the next score()/fit()
+        return self
+
+    @property
+    def stream_state(self):
+        return self._stream_state
+
+    # -- inference --------------------------------------------------------
+    def _check_fitted(self):
+        if self.centers_ is None:
+            raise RuntimeError("SampledKMeans: call fit/partial_fit first")
+
+    def predict(self, x: Array) -> Array:
+        """Nearest-center id per point (through the planned backend)."""
+        self._check_fitted()
+        idx, _ = self.plan().backend.assign_points(x, self.centers_)
+        return idx
+
+    def transform(self, x: Array) -> Array:
+        """(m, k) squared distances to the fitted centers."""
+        self._check_fitted()
+        return pairwise_sqdist(x, self.centers_)
+
+    def score(self, x: Array) -> Array:
+        """Negative weighted SSE of ``x`` under the fitted centers (larger
+        is better, sklearn convention)."""
+        self._check_fitted()
+        pl = self.plan()
+        _, mind = pl.backend.assign_points(x, self.centers_)
+        return -jnp.sum(mind)
+
+    def __repr__(self):
+        fitted = "fitted" if self.centers_ is not None else "unfitted"
+        return (f"<SampledKMeans k={self.spec.merge.k} "
+                f"mode={self.spec.execution.mode} {fitted}>")

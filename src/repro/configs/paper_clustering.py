@@ -1,7 +1,15 @@
-"""The paper's own workload as a config: the synthetic 500k-point / 1000-
-cluster clustering job (500 points per cluster, 2-D), compression sweep
+"""The paper's own workloads as declarative specs: the synthetic 500k-point /
+1000-cluster clustering job (500 points per cluster, 2-D), compression sweep
 c in {5, 10, 15, 20}, 64 subclusters — used by examples/cluster_500k.py and
-benchmarks/bench_scaling.py."""
+benchmarks/bench_scaling.py.
+
+``workload_spec(name)`` returns the :class:`~repro.core.spec.ClusterSpec`
+for a named workload (plus data sizing via ``PAPER_WORKLOADS``), so every
+benchmark / example constructs the same spec instead of re-spelling kwargs.
+"""
+from repro.core.spec import (ClusterSpec, ExecutionSpec, LocalSpec,
+                             MergeSpec, PartitionSpec)
+
 PAPER_WORKLOADS = {
     "iris": dict(n=150, dim=4, k=3, n_sub=6, compression=6),
     "seeds": dict(n=210, dim=7, k=3, n_sub=6, compression=6),
@@ -10,3 +18,23 @@ PAPER_WORKLOADS = {
     "synthetic_500k": dict(n=500_000, dim=2, k=1000, n_sub=64, compression=5),
 }
 COMPRESSION_SWEEP = (5, 10, 15, 20)
+
+
+def workload_spec(name: str, *, scheme: str = "equal",
+                  compression: int | None = None,
+                  local_iters: int = 10, global_iters: int = 25,
+                  backend=None, mode: str = "auto") -> ClusterSpec:
+    """ClusterSpec for a named paper workload (see ``PAPER_WORKLOADS``)."""
+    try:
+        w = PAPER_WORKLOADS[name]
+    except KeyError:
+        raise ValueError(f"unknown paper workload {name!r}; known: "
+                         f"{sorted(PAPER_WORKLOADS)}") from None
+    return ClusterSpec(
+        partition=PartitionSpec(scheme=scheme, n_sub=w["n_sub"]),
+        local=LocalSpec(compression=compression or w["compression"],
+                        iters=local_iters),
+        merge=MergeSpec(k=w["k"], iters=global_iters),
+        execution=ExecutionSpec(backend=backend if backend is not None
+                                else "auto", mode=mode),
+    )

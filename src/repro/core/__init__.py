@@ -1,35 +1,53 @@
 """Core library: the paper's parallel sampling-based clustering in JAX.
 
 Public API:
+  ClusterSpec (+ PartitionSpec/LocalSpec/MergeSpec/ExecutionSpec)
+                                  — declarative job description (core.spec)
   kmeans, KMeansResult            — weighted Lloyd's algorithm
+  register_init / get_init        — init-scheme registry (kmeans++ | random |
+                                    landmark | kmeans||)
+  register_partitioner / get_partitioner — subclustering registry (equal |
+                                    unequal, paper Algorithms 1/2)
   get_backend, register_backend   — LloydBackend registry (jnp | pallas |
                                     pallas_fused | auto, REPRO_KMEANS_BACKEND)
-  equal_partition, unequal_partition, feature_scale — the two subclustering schemes
-  sampled_kmeans, standard_kmeans — the paper's two-level method + baseline
+  fit_from_spec                   — spec-driven single-device pipeline
+  sampled_kmeans, standard_kmeans — thin flat-kwarg adapters over the above
   make_distributed_sampled_kmeans — pod-scale shard_map version
   sse, relative_error, clustering_accuracy — metrics
+
+The estimator facade (`SampledKMeans`) and the plan/execute split live one
+level up in :mod:`repro.api`.
 """
 from .backend import (LloydBackend, PallasBackend, PallasFusedBackend,
                       available_backends, get_backend, register_backend)
-from .kmeans import (KMeansResult, assign_jnp, kmeans, kmeans_lloyd_step,
+from .kmeans import (KMeansResult, assign_jnp, available_inits, get_init,
+                     kmeans, kmeans_lloyd_step, kmeans_parallel_init,
                      kmeans_pp_init, landmark_init, pairwise_sqdist,
-                     random_init, update_centers)
+                     random_init, register_init, update_centers)
 from .metrics import clustering_accuracy, relative_error, sse
-from .pipeline import (SampledClusteringResult, local_stage, sampled_kmeans,
-                       standard_kmeans)
-from .subcluster import (Partition, equal_partition, feature_scale,
-                         gather_partitions, unequal_landmarks,
+from .pipeline import (SampledClusteringResult, fit_from_spec, local_stage,
+                       sampled_kmeans, standard_kmeans)
+from .spec import (ClusterSpec, ExecutionSpec, LocalSpec, MergeSpec,
+                   PartitionSpec)
+from .subcluster import (Partition, available_partitioners, equal_partition,
+                         feature_scale, gather_partitions, get_partitioner,
+                         register_partitioner, unequal_landmarks,
                          unequal_partition, unscale)
 from .distributed import (DistributedClusteringResult,
                           make_distributed_sampled_kmeans)
 
 __all__ = [
+    "ClusterSpec", "PartitionSpec", "LocalSpec", "MergeSpec",
+    "ExecutionSpec",
     "KMeansResult", "kmeans", "kmeans_lloyd_step", "assign_jnp",
-    "kmeans_pp_init", "landmark_init", "random_init", "pairwise_sqdist",
-    "update_centers", "Partition", "equal_partition", "unequal_partition",
+    "kmeans_pp_init", "kmeans_parallel_init", "landmark_init", "random_init",
+    "pairwise_sqdist", "update_centers",
+    "register_init", "get_init", "available_inits",
+    "Partition", "equal_partition", "unequal_partition",
+    "register_partitioner", "get_partitioner", "available_partitioners",
     "feature_scale", "unscale", "gather_partitions", "unequal_landmarks",
-    "SampledClusteringResult", "sampled_kmeans", "standard_kmeans",
-    "local_stage", "DistributedClusteringResult",
+    "SampledClusteringResult", "fit_from_spec", "sampled_kmeans",
+    "standard_kmeans", "local_stage", "DistributedClusteringResult",
     "make_distributed_sampled_kmeans", "sse", "relative_error",
     "clustering_accuracy", "LloydBackend", "PallasBackend",
     "PallasFusedBackend", "get_backend", "register_backend",

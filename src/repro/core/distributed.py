@@ -31,7 +31,8 @@ from repro import compat
 
 from .backend import BackendSpec, LloydBackend, get_backend
 from .kmeans import kmeans
-from .subcluster import equal_partition, gather_partitions, unequal_partition
+from .spec import ClusterSpec
+from .subcluster import gather_partitions, get_partitioner
 
 Array = jax.Array
 
@@ -102,9 +103,10 @@ def _distributed_merge(
 
 def make_distributed_sampled_kmeans(
     mesh: jax.sharding.Mesh,
-    k: int,
+    k: int = None,
     *,
-    axis: str = "data",
+    spec: ClusterSpec = None,
+    axis: str = None,
     scheme: str = "equal",
     n_sub_per_device: int = 4,
     compression: int = 5,
@@ -114,22 +116,50 @@ def make_distributed_sampled_kmeans(
     weighted_merge: bool = False,
     capacity_factor: float = 2.0,
     backend: BackendSpec = None,
+    init: str = "kmeans++",
 ):
     """Build a jit-able ``fn(x, key) -> DistributedClusteringResult`` where
     ``x`` is (M, d) sharded along ``axis``.  This is deliverable (a)'s main
-    entry point for cluster-scale data."""
+    entry point for cluster-scale data.
+
+    With ``spec=`` every stage option comes from the
+    :class:`~repro.core.spec.ClusterSpec` (``spec.partition.n_sub`` counts
+    subclusters *per device*; ``spec.execution.mesh_axis`` is the data
+    axis); the flat kwargs remain as the legacy spelling.
+    """
+    if spec is not None:
+        if k is not None and k != spec.merge.k:
+            raise ValueError(f"k={k} disagrees with spec.merge.k="
+                             f"{spec.merge.k}")
+        k = spec.merge.k
+        scheme = spec.partition.scheme
+        n_sub_per_device = spec.partition.n_sub
+        capacity_factor = spec.partition.capacity_factor
+        compression = spec.local.compression
+        local_iters = spec.local.iters
+        global_iters = spec.merge.iters
+        weighted_merge = spec.merge.weighted
+        # an explicit backend= (e.g. the planner's resolved instance)
+        # outranks the spec's name, mirroring fit_from_spec
+        backend = backend if backend is not None else spec.execution.backend
+        init = spec.local.init
+        merge_init = spec.merge.init
+        restarts = spec.merge.restarts
+        axis = axis or spec.execution.mesh_axis
+    elif k is None:
+        raise TypeError("make_distributed_sampled_kmeans: pass k or spec=")
+    else:
+        merge_init, restarts = "kmeans++", 4
+    axis = axis or "data"
     be = get_backend(backend)
+    partitioner = get_partitioner(scheme)
 
     def per_device(xs: Array, key: Array) -> DistributedClusteringResult:
         my = jax.lax.axis_index(axis)
         key = jax.random.fold_in(key, my)
         xn, _ = _global_feature_scale(xs, axis)
 
-        if scheme == "equal":
-            part = equal_partition(xn, n_sub_per_device)
-        else:
-            part = unequal_partition(xn, n_sub_per_device,
-                                     capacity_factor=capacity_factor)
+        part = partitioner(xn, n_sub_per_device, capacity_factor)
         parts, part_w = gather_partitions(xn, part)
         cap = parts.shape[1]
         k_local = max(1, cap // compression)
@@ -137,7 +167,7 @@ def make_distributed_sampled_kmeans(
         keys = jax.random.split(jax.random.fold_in(key, 1), n_sub_per_device)
         local = jax.vmap(
             lambda p, w, kk: kmeans(p, k_local, weights=w, iters=local_iters,
-                                    key=kk, backend=be)
+                                    key=kk, init=init, backend=be)
         )(parts, part_w, keys)
 
         d = xs.shape[-1]
@@ -151,9 +181,10 @@ def make_distributed_sampled_kmeans(
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
             merged = kmeans(all_c, k, weights=all_w, iters=global_iters,
-                            key=jax.random.PRNGKey(17), backend=be,
-                            restarts=4)  # same multi-seed guard as the
-                                         # batch pipeline's merge stage
+                            key=jax.random.PRNGKey(17), init=merge_init,
+                            backend=be,
+                            restarts=restarts)  # same multi-seed guard as
+                                                # the batch merge stage
             centers = merged.centers
         elif merge == "distributed":
             centers = _distributed_merge(lc, merge_w, k, global_iters,

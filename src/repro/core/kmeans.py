@@ -14,6 +14,7 @@ the gathered local centers.  Everything is static-shape / jit / vmap friendly:
 """
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple, Optional
 
 import jax
@@ -139,11 +140,96 @@ def kmeans_pp_init(x: Array, weights: Array, k: int, key: Array) -> Array:
     return centers
 
 
-_INITS = {
+def kmeans_parallel_init(x: Array, weights: Array, k: int, key: Array,
+                         *, rounds: int = 3,
+                         oversample: int | None = None) -> Array:
+    """k-means|| (Bahmani et al., Scalable K-Means++): oversample-then-reduce.
+
+    Instead of k strictly sequential D²-draws, each of ``rounds`` rounds
+    draws ``oversample`` (default 2k) candidates *jointly* with probability
+    proportional to ``weight * min_dist²`` (Gumbel top-k = weighted sampling
+    without replacement — the static-shape stand-in for the paper's
+    independent coin flips).  The ~``rounds * 2k`` candidates are then
+    weighted by the point mass they attract and reduced to k centers by
+    weighted k-means++.  Depth drops from O(k) dependent steps to
+    O(rounds) — the right init for large k and for the merge stage, where
+    the points are already weighted representatives.
+    """
+    m = x.shape[0]
+    # top_k cannot draw more than m candidates per round; the merge stage
+    # routinely runs with m only a few multiples of k, so clamp
+    l = min(oversample or 2 * k, m)
+    key0, key_rounds, key_reduce = jax.random.split(key, 3)
+
+    first = jax.random.categorical(key0, jnp.where(weights > 0, 0.0, -jnp.inf))
+    min_d = jnp.sum((x - x[first]) ** 2, axis=-1)
+    n_cand = 1 + rounds * l
+    cand = jnp.zeros((n_cand,) + x.shape[1:], x.dtype).at[0].set(x[first])
+    cand_valid = jnp.zeros((n_cand,), bool).at[0].set(True)
+
+    def round_body(r, carry):
+        cand, cand_valid, min_d = carry
+        kk = jax.random.fold_in(key_rounds, r)
+        p = min_d * weights
+        logits = jnp.where(p > 0, jnp.log(jnp.maximum(p, 1e-30)), -jnp.inf)
+        scores = logits + jax.random.gumbel(kk, logits.shape)
+        top_scores, ids = jax.lax.top_k(scores, l)
+        ok = jnp.isfinite(top_scores)          # fewer than l useful points?
+        picked = x[ids]
+        slot = 1 + r * l + jnp.arange(l)
+        cand = cand.at[slot].set(jnp.where(ok[:, None], picked, 0.0))
+        cand_valid = cand_valid.at[slot].set(ok)
+        # one distance update per ROUND (not per candidate): new min over
+        # the l fresh candidates, masked to the ones actually drawn
+        d_new = pairwise_sqdist(x, picked)
+        d_new = jnp.where(ok[None, :], d_new, jnp.inf)
+        return cand, cand_valid, jnp.minimum(min_d, jnp.min(d_new, axis=-1))
+
+    cand, cand_valid, _ = jax.lax.fori_loop(
+        0, rounds, round_body, (cand, cand_valid, min_d))
+
+    # weight candidates by the point mass they attract, then reduce with
+    # the sequential k-means++ on the (small) candidate set only
+    d2 = pairwise_sqdist(x, cand)
+    d2 = jnp.where(cand_valid[None, :], d2, jnp.inf)
+    nearest = jnp.argmin(d2, axis=-1)
+    cand_w = (jax.nn.one_hot(nearest, n_cand, dtype=jnp.float32)
+              * weights[:, None].astype(jnp.float32)).sum(axis=0)
+    cand_w = jnp.where(cand_valid, jnp.maximum(cand_w, 1e-12), 0.0)
+    return kmeans_pp_init(cand, cand_w.astype(x.dtype), k, key_reduce)
+
+
+# ---------------------------------------------------------------------------
+# Init registry — what ``LocalSpec.init`` / ``MergeSpec.init`` resolve
+# against.  An init maps ``(x, weights, k, key) -> (k, d) centers``.
+# ---------------------------------------------------------------------------
+
+InitFn = Callable[[Array, Array, int, Array], Array]
+
+_INITS: dict[str, InitFn] = {
     "random": random_init,
     "landmark": landmark_init,
     "kmeans++": kmeans_pp_init,
+    "kmeans||": kmeans_parallel_init,
 }
+
+
+def register_init(name: str, fn: InitFn) -> None:
+    """Register ``fn(x, weights, k, key) -> centers`` as an init scheme."""
+    _INITS[name] = fn
+
+
+def get_init(name: str) -> InitFn:
+    try:
+        return _INITS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown init scheme {name!r}; known: {sorted(_INITS)}"
+        ) from None
+
+
+def available_inits() -> tuple[str, ...]:
+    return tuple(sorted(_INITS))
 
 
 def _jittered_array_init(init: Array, x: Array, key: Array,
@@ -194,8 +280,16 @@ def kmeans(
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    be = AssignFnBackend(assign_fn) if assign_fn is not None \
-        else get_backend(backend)
+    if assign_fn is not None:
+        warnings.warn(
+            "kmeans(assign_fn=...) is deprecated: pass backend= (a name or "
+            "LloydBackend instance, see repro.core.backend) instead; the "
+            "assign_fn adapter pays the one-hot update and per-iteration "
+            "padding the backends hoist",
+            DeprecationWarning, stacklevel=2)
+        be = AssignFnBackend(assign_fn)
+    else:
+        be = get_backend(backend)
     prep = be.prepare(x, weights)   # pad ONCE, outside the Lloyd loop
     w32 = weights.astype(jnp.float32)
 
@@ -211,7 +305,7 @@ def kmeans(
 
     def one_run(kk, r):
         if isinstance(init, str):
-            centers0 = _INITS[init](x, weights, k, kk)
+            centers0 = get_init(init)(x, weights, k, kk)
         else:
             centers0 = _jittered_array_init(init, x, kk, r)
         return lloyd(centers0)

@@ -1,10 +1,15 @@
 """The paper's end-to-end method: partition -> local k-means -> merge k-means.
 
-``sampled_kmeans`` is the single-device reference (host semantics of the
-paper); :mod:`repro.core.distributed` wraps it in shard_map for pod scale.
+:func:`fit_from_spec` is the spec-driven single-device implementation (the
+host semantics of the paper); :mod:`repro.core.distributed` wraps the same
+stages in shard_map for pod scale, and :mod:`repro.api` dispatches between
+them.  ``sampled_kmeans`` / ``standard_kmeans`` remain as thin adapters
+that build a :class:`~repro.core.spec.ClusterSpec` internally from the
+historical flat kwargs.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -13,8 +18,9 @@ import jax.numpy as jnp
 from .backend import BackendSpec, get_backend
 from .kmeans import KMeansResult, kmeans
 from .metrics import sse as sse_fn
-from .subcluster import (Partition, equal_partition, feature_scale,
-                         gather_partitions, unequal_partition, unscale)
+from .spec import ClusterSpec
+from .subcluster import (Partition, feature_scale, gather_partitions,
+                         get_partitioner, unscale)
 
 Array = jax.Array
 
@@ -50,61 +56,44 @@ def local_stage(
     )(parts, part_w, keys)
 
 
-def sampled_kmeans(
-    x: Array,
-    k: int,
-    *,
-    scheme: str = "equal",
-    n_sub: int = 8,
-    compression: int = 5,
-    local_iters: int = 10,
-    global_iters: int = 25,
-    key: Optional[Array] = None,
-    init: str = "kmeans++",
-    weighted_merge: bool = False,
-    capacity_factor: float = 2.0,
-    scale: bool = True,
-    backend: BackendSpec = None,
-    restarts: int = 4,
-) -> SampledClusteringResult:
-    """Two-level sampled clustering (the paper's full method).
-
-    ``compression`` is the paper's `c`: every partition of N points is
-    summarised by ``N // c`` local centers.  ``weighted_merge=True`` is a
-    beyond-paper refinement: the merge k-means weights each local center by
-    its member count (the paper merges unweighted).
-    """
+def fit_from_spec(x: Array, spec: ClusterSpec,
+                  key: Optional[Array] = None, *,
+                  backend: BackendSpec = None) -> SampledClusteringResult:
+    """Run the full two-level pipeline as declared by ``spec`` on one
+    device.  ``backend`` overrides ``spec.execution.backend`` when the
+    caller (e.g. the planner) has already resolved an instance."""
     if key is None:
         key = jax.random.PRNGKey(0)
     key_local, key_global = jax.random.split(key)
+    be = get_backend(backend if backend is not None
+                     else spec.execution.backend)
 
-    xs, params = feature_scale(x) if scale else (x, None)
+    xs, params = feature_scale(x) if spec.scale else (x, None)
 
-    if scheme == "equal":
-        part: Partition = equal_partition(xs, n_sub)
-    elif scheme == "unequal":
-        part = unequal_partition(xs, n_sub, capacity_factor=capacity_factor)
-    else:
-        raise ValueError(f"unknown scheme {scheme!r}")
+    part: Partition = get_partitioner(spec.partition.scheme)(
+        xs, spec.partition.n_sub, spec.partition.capacity_factor)
 
     parts, part_w = gather_partitions(xs, part)
     cap = parts.shape[1]
-    k_local = max(1, cap // compression)
+    k_local = max(1, cap // spec.local.compression)
 
-    local = local_stage(parts, part_w, k_local, iters=local_iters,
-                        key=key_local, init=init, backend=backend)
+    local = local_stage(parts, part_w, k_local, iters=spec.local.iters,
+                        key=key_local, init=spec.local.init, backend=be)
 
     d = x.shape[-1]
+    n_sub = spec.partition.n_sub
     local_centers = local.centers.reshape(n_sub * k_local, d)
     local_counts = local.counts.reshape(n_sub * k_local)
-    merge_w = local_counts if weighted_merge else (local_counts > 0).astype(x.dtype)
+    merge_w = (local_counts if spec.merge.weighted
+               else (local_counts > 0).astype(x.dtype))
 
-    merged = kmeans(local_centers, k, weights=merge_w, iters=global_iters,
-                    key=key_global, init=init, backend=backend,
-                    restarts=restarts)
+    merged = kmeans(local_centers, spec.merge.k, weights=merge_w,
+                    iters=spec.merge.iters, key=key_global,
+                    init=spec.merge.init, backend=be,
+                    restarts=spec.merge.restarts)
 
     centers = merged.centers
-    if scale:
+    if spec.scale:
         centers = unscale(centers, params)
         local_centers = unscale(local_centers, params)
     total_sse = sse_fn(x, centers)
@@ -112,13 +101,71 @@ def sampled_kmeans(
                                    local_counts, part.n_dropped)
 
 
+_SPEC_KWARGS = ("scheme", "n_sub", "compression", "local_iters",
+                "global_iters", "init", "weighted_merge", "capacity_factor",
+                "scale", "backend", "restarts")
+
+
+def sampled_kmeans(
+    x: Array,
+    k: int,
+    *,
+    spec: Optional[ClusterSpec] = None,
+    key: Optional[Array] = None,
+    **kwargs,
+) -> SampledClusteringResult:
+    """Two-level sampled clustering (the paper's full method).
+
+    Thin adapter over :func:`fit_from_spec`: pass ``spec=`` (preferred — see
+    :class:`repro.core.spec.ClusterSpec`) or the historical flat kwargs
+    (``scheme=``, ``n_sub=``, ``compression=``, ... — deprecated spellings
+    that build the same spec internally).  ``compression`` is the paper's
+    `c`: every partition of N points is summarised by ``N // c`` local
+    centers.
+    """
+    if spec is not None:
+        if kwargs:
+            raise TypeError(
+                f"sampled_kmeans: pass either spec= or flat kwargs, not "
+                f"both (got {sorted(kwargs)})")
+        if spec.merge.k != k:
+            raise ValueError(
+                f"sampled_kmeans(k={k}) disagrees with spec.merge.k="
+                f"{spec.merge.k}")
+    else:
+        unknown = set(kwargs) - set(_SPEC_KWARGS)
+        if unknown:
+            raise TypeError(
+                f"sampled_kmeans: unknown kwargs {sorted(unknown)}")
+        if kwargs:
+            warnings.warn(
+                "sampled_kmeans(scheme=, n_sub=, compression=, ...) flat "
+                "kwargs are deprecated: build a ClusterSpec (see "
+                "repro.core.spec) and pass spec= — or use the "
+                "repro.api.SampledKMeans facade",
+                DeprecationWarning, stacklevel=2)
+        spec = ClusterSpec.make(k, **kwargs)
+    return fit_from_spec(x, spec, key)
+
+
 def standard_kmeans(
     x: Array, k: int, *, iters: int = 25, key: Optional[Array] = None,
     init: str = "kmeans++", scale: bool = True,
     backend: BackendSpec = None, restarts: int = 4,
+    spec: Optional[ClusterSpec] = None,
 ) -> SampledClusteringResult:
     """The baseline the paper compares against (plain Lloyd on all points),
-    wrapped to return the same result type."""
+    wrapped to return the same result type.  With ``spec=`` the merge and
+    execution sections supply (iters, init, restarts, backend, scale) —
+    the baseline is the merge stage run on the raw points."""
+    if spec is not None:
+        if spec.merge.k != k:
+            raise ValueError(
+                f"standard_kmeans(k={k}) disagrees with spec.merge.k="
+                f"{spec.merge.k}")
+        iters = spec.merge.iters
+        init, restarts = spec.merge.init, spec.merge.restarts
+        backend, scale = spec.execution.backend, spec.scale
     if key is None:
         key = jax.random.PRNGKey(0)
     xs, params = feature_scale(x) if scale else (x, None)

@@ -1,0 +1,208 @@
+"""Declarative clustering specification — ONE vocabulary for every surface.
+
+The paper's method is one algorithm (partition -> local k-means -> merge),
+but by PR 2 the repo spelled its options four different ways
+(``sampled_kmeans(**13 kwargs)``, ``StreamConfig``, the shard_map wrapper's
+kwargs, per-subsystem backend knobs).  A :class:`ClusterSpec` names each
+stage once, with composable frozen dataclasses:
+
+    spec = ClusterSpec(
+        partition=PartitionSpec(scheme="equal", n_sub=64),
+        local=LocalSpec(compression=5, iters=10, init="kmeans++"),
+        merge=MergeSpec(k=1000, iters=25, weighted=False, init="kmeans||"),
+        execution=ExecutionSpec(backend="auto", mode="auto"),
+    )
+
+Specs are hashable (jit-static), serializable (``to_dict``/``from_dict``
+round-trip through plain JSON), and *declarative*: names like
+``partition.scheme``, ``local.init`` and ``execution.backend`` are resolved
+against the partitioner / init / LloydBackend registries only when a plan is
+built (:func:`repro.api.plan`), so user-registered entries work everywhere.
+
+``ClusterSpec.make`` accepts the historical flat kwarg vocabulary and is
+what the thin ``sampled_kmeans(...)`` adapter builds internally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+from .backend import BackendSpec, LloydBackend
+
+_MODES = ("auto", "single", "shard_map", "stream")
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """How the point set is split into subclusters (paper Algorithms 1/2).
+
+    ``scheme`` resolves against :func:`repro.core.subcluster.get_partitioner`
+    (built-ins: ``"equal"``, ``"unequal"``); ``n_sub`` is the partition count
+    (per device under shard_map); ``capacity_factor`` bounds Algorithm 2's
+    data-dependent partition sizes, MoE-router style.
+    """
+    scheme: str = "equal"
+    n_sub: int = 8
+    capacity_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalSpec:
+    """The per-partition ("device part") k-means.
+
+    ``compression`` is the paper's ``c`` (an N-point partition is summarised
+    by N//c local centers); ``init`` resolves against
+    :func:`repro.core.kmeans.get_init`.
+    """
+    compression: int = 5
+    iters: int = 10
+    init: str = "kmeans++"
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeSpec:
+    """The merge ("host part") k-means over the sampled representatives.
+
+    ``k`` is the global cluster count; ``weighted=True`` weights each local
+    center by its member count (beyond-paper refinement); ``restarts`` is
+    the multi-seed lowest-SSE guard.
+    """
+    k: int
+    iters: int = 25
+    weighted: bool = False
+    restarts: int = 4
+    init: str = "kmeans++"
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionSpec:
+    """Where and how the plan runs.
+
+    ``backend`` names a :class:`repro.core.backend.LloydBackend` (``"auto"``
+    consults ``REPRO_KMEANS_BACKEND`` then the hardware); ``mode`` picks the
+    engine: ``"single"`` (one-device vmap), ``"shard_map"`` (pod-scale,
+    needs a mesh), ``"stream"`` (incremental coreset engine), or ``"auto"``
+    (shard_map when a mesh is supplied, else single).  ``mesh_axis`` is the
+    mesh axis the data is sharded along; ``donate`` lets jit reuse the input
+    buffer for single-mode fits (the points are consumed anyway).
+    """
+    backend: BackendSpec = "auto"
+    mode: str = "auto"
+    mesh_axis: str = "data"
+    donate: bool = False
+
+    def __post_init__(self):
+        if self.mode not in _MODES:
+            raise ValueError(
+                f"unknown execution mode {self.mode!r}; known: {_MODES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """The full declarative job: partition -> local -> merge + execution.
+
+    ``scale=True`` applies the paper's min-max feature scaling around the
+    whole pipeline (centers are mapped back to input space).
+    """
+    merge: MergeSpec
+    partition: PartitionSpec = PartitionSpec()
+    local: LocalSpec = LocalSpec()
+    execution: ExecutionSpec = ExecutionSpec()
+    scale: bool = True
+
+    # -- flat-kwargs bridge (the legacy vocabulary) -----------------------
+    @classmethod
+    def make(cls, k: int, *, scheme: str = "equal", n_sub: int = 8,
+             compression: int = 5, local_iters: int = 10,
+             global_iters: int = 25, init: str = "kmeans++",
+             merge_init: Optional[str] = None, weighted_merge: bool = False,
+             capacity_factor: float = 2.0, scale: bool = True,
+             backend: BackendSpec = None, restarts: int = 4,
+             mode: str = "auto", mesh_axis: str = "data",
+             donate: bool = False) -> "ClusterSpec":
+        """Build a spec from the historical flat kwarg vocabulary (what
+        ``sampled_kmeans`` took before specs existed).  ``init`` seeds both
+        stages unless ``merge_init`` overrides the merge stage."""
+        return cls(
+            partition=PartitionSpec(scheme=scheme, n_sub=n_sub,
+                                    capacity_factor=capacity_factor),
+            local=LocalSpec(compression=compression, iters=local_iters,
+                            init=init),
+            merge=MergeSpec(k=k, iters=global_iters, weighted=weighted_merge,
+                            restarts=restarts, init=merge_init or init),
+            execution=ExecutionSpec(backend=backend if backend is not None
+                                    else "auto", mode=mode,
+                                    mesh_axis=mesh_axis, donate=donate),
+            scale=scale,
+        )
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        """Nested plain-python dict, JSON-serializable.  A backend given as
+        an instance is recorded by its registry name."""
+        d = dataclasses.asdict(self)
+        be = self.execution.backend
+        if isinstance(be, LloydBackend):
+            d["execution"]["backend"] = be.name
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "ClusterSpec":
+        """Inverse of :meth:`to_dict`; unknown keys raise (catch config
+        typos instead of silently ignoring them)."""
+        d = dict(d)
+        parts = {
+            "merge": (MergeSpec, d.pop("merge")),
+            "partition": (PartitionSpec, d.pop("partition", {})),
+            "local": (LocalSpec, d.pop("local", {})),
+            "execution": (ExecutionSpec, d.pop("execution", {})),
+        }
+        kwargs = {}
+        for field, (klass, sub) in parts.items():
+            sub = dict(sub)
+            known = {f.name for f in dataclasses.fields(klass)}
+            unknown = set(sub) - known
+            if unknown:
+                raise ValueError(
+                    f"ClusterSpec.from_dict: unknown {field} keys "
+                    f"{sorted(unknown)}; known: {sorted(known)}")
+            kwargs[field] = klass(**sub)
+        scale = d.pop("scale", True)
+        if d:
+            raise ValueError(
+                f"ClusterSpec.from_dict: unknown top-level keys {sorted(d)}")
+        return cls(scale=scale, **kwargs)
+
+    # -- convenience ------------------------------------------------------
+    @property
+    def k(self) -> int:
+        return self.merge.k
+
+    def replace(self, **kwargs) -> "ClusterSpec":
+        """``dataclasses.replace`` that also reaches one level down:
+        ``spec.replace(mode="stream", n_sub=16)`` touches the right
+        sub-spec by field name.  Names that exist in more than one
+        sub-spec (``iters``, ``init``) are ambiguous and raise — pass the
+        sub-spec explicitly (``spec.replace(merge=...)``)."""
+        top = {f.name for f in dataclasses.fields(ClusterSpec)}
+        updates: dict[str, Any] = {}
+        for name, value in kwargs.items():
+            if name in top:
+                updates[name] = value
+                continue
+            owners = [s for s in ("partition", "local", "merge", "execution")
+                      if name in {f.name for f in dataclasses.fields(
+                          type(getattr(self, s)))}]
+            if not owners:
+                raise TypeError(f"ClusterSpec.replace: unknown field "
+                                f"{name!r}")
+            if len(owners) > 1:
+                raise TypeError(
+                    f"ClusterSpec.replace: {name!r} is ambiguous (lives in "
+                    f"{' and '.join(owners)}); replace the sub-spec "
+                    f"explicitly, e.g. spec.replace({owners[-1]}="
+                    f"dataclasses.replace(spec.{owners[-1]}, {name}=...))")
+            sub_name = owners[0]
+            sub = updates.get(sub_name, getattr(self, sub_name))
+            updates[sub_name] = dataclasses.replace(sub, **{name: value})
+        return dataclasses.replace(self, **updates)

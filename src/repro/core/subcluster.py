@@ -19,7 +19,8 @@ sweeps validate this).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import warnings
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -80,7 +81,24 @@ def unequal_partition(
     """Algorithm 2 with MoE-style capacity bounding (see module docstring)."""
     m = x.shape[0]
     if capacity is None:
+        if capacity_factor < 1.0:
+            # below-even-split capacity guarantees drops whenever any
+            # landmark attracts at least its even share of points
+            warnings.warn(
+                f"unequal_partition: capacity_factor={capacity_factor} < 1 "
+                f"bounds every partition below the even split "
+                f"ceil(M/P)={-(-m // n_landmarks)}; overflow points WILL be "
+                f"dropped from the local stage (n_dropped stays exact)",
+                stacklevel=2)
         capacity = int(-(-m // n_landmarks) * capacity_factor)
+        if capacity > m:
+            # the min() clamp is about to engage: the requested capacity
+            # exceeds the point count, so the factor is effectively inert
+            warnings.warn(
+                f"unequal_partition: capacity "
+                f"ceil(M/P)*capacity_factor={capacity} exceeds M={m}; "
+                f"clamping to M (capacity_factor={capacity_factor} has no "
+                f"further effect at this size)", stacklevel=2)
         capacity = min(capacity, m)
     lms = unequal_landmarks(x, n_landmarks)
     d = (
@@ -111,3 +129,39 @@ def gather_partitions(x: Array, part: Partition) -> tuple[Array, Array]:
     pts = x[part.indices]
     w = part.mask.astype(x.dtype)
     return pts, w
+
+
+# ---------------------------------------------------------------------------
+# Partitioner registry
+# ---------------------------------------------------------------------------
+# A partitioner maps ``(x, n_sub, capacity_factor) -> Partition``.  The
+# registry is what :class:`repro.core.spec.PartitionSpec.scheme` resolves
+# against, so new subclustering strategies plug into every surface (batch,
+# shard_map, stream) by registering one callable.
+
+PartitionerFn = Callable[[Array, int, float], Partition]
+
+_PARTITIONERS: dict[str, PartitionerFn] = {
+    "equal": lambda x, n_sub, capacity_factor: equal_partition(x, n_sub),
+    "unequal": lambda x, n_sub, capacity_factor: unequal_partition(
+        x, n_sub, capacity_factor=capacity_factor),
+}
+
+
+def register_partitioner(name: str, fn: PartitionerFn) -> None:
+    """Register ``fn(x, n_sub, capacity_factor) -> Partition`` under
+    ``name`` (resolvable from ``PartitionSpec.scheme``)."""
+    _PARTITIONERS[name] = fn
+
+
+def get_partitioner(name: str) -> PartitionerFn:
+    try:
+        return _PARTITIONERS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown partition scheme {name!r}; known: "
+            f"{sorted(_PARTITIONERS)}") from None
+
+
+def available_partitioners() -> tuple[str, ...]:
+    return tuple(sorted(_PARTITIONERS))

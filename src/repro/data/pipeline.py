@@ -14,7 +14,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import sampled_kmeans
+from repro.core import ClusterSpec, sampled_kmeans
 
 
 def doc_sketch(tokens: np.ndarray, dim: int = 32) -> np.ndarray:
@@ -31,20 +31,27 @@ class ClusterBalancedSampler:
     """Cluster a corpus of documents once (paper pipeline), then sample
     batches uniformly over clusters."""
 
-    def __init__(self, docs_tokens: np.ndarray, n_clusters: int = 16,
-                 *, n_sub: int = 8, compression: int = 5, seed: int = 0):
+    def __init__(self, docs_tokens: np.ndarray, n_clusters: int | None = None,
+                 *, n_sub: int = 8, compression: int = 5, seed: int = 0,
+                 spec: ClusterSpec | None = None):
         self.docs = docs_tokens
         sketches = jnp.asarray(doc_sketch(docs_tokens))
-        res = sampled_kmeans(sketches, n_clusters, scheme="equal",
-                             n_sub=n_sub, compression=compression,
+        if spec is None:
+            spec = ClusterSpec.make(16 if n_clusters is None else n_clusters,
+                                    scheme="equal", n_sub=n_sub,
+                                    compression=compression)
+        elif n_clusters is not None and n_clusters != spec.merge.k:
+            raise ValueError(f"n_clusters={n_clusters} disagrees with "
+                             f"spec.merge.k={spec.merge.k}")
+        res = sampled_kmeans(sketches, spec.merge.k, spec=spec,
                              key=jax.random.PRNGKey(seed))
         d2 = (jnp.sum(sketches ** 2, -1, keepdims=True)
               + jnp.sum(res.centers ** 2, -1)[None, :]
               - 2.0 * sketches @ res.centers.T)
         self.assignment = np.asarray(jnp.argmin(d2, -1))
-        self.n_clusters = n_clusters
+        self.n_clusters = spec.merge.k
         self.by_cluster = [np.nonzero(self.assignment == c)[0]
-                           for c in range(n_clusters)]
+                           for c in range(self.n_clusters)]
         self.by_cluster = [ids for ids in self.by_cluster if len(ids)]
         self.seed = seed
 

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig, ShapeConfig
+from repro.core.spec import ClusterSpec
 from repro.models.attention import compress_kv_cache
 from repro.models.registry import build_model, cache_kind
 from repro.stream.kv import refresh_layer_cache
@@ -34,6 +35,11 @@ class ServeConfig:
     temperature: float = 0.0        # 0 = greedy
     kmeans_backend: str = "auto"    # LloydBackend for the recompression
                                     # k-means (repro.core.backend)
+    recompress_spec: "ClusterSpec | None" = None
+                                    # declarative alternative: a ClusterSpec
+                                    # whose merge/execution sections supply
+                                    # the refresh iters + backend (overrides
+                                    # recompress_iters / kmeans_backend)
 
 
 class ServeEngine:
@@ -56,9 +62,15 @@ class ServeEngine:
                 f"recompress_every={every} exceeds cluster_window="
                 f"{shape.cluster_window}: tokens would be evicted unfolded")
         from repro.core.backend import get_backend
+        rspec = self.scfg.recompress_spec
+        refresh_iters = (rspec.merge.iters if rspec is not None
+                         else self.scfg.recompress_iters)
+        refresh_backend = get_backend(rspec.execution.backend
+                                      if rspec is not None
+                                      else self.scfg.kmeans_backend)
         self._refresh = jax.jit(functools.partial(
-            refresh_layer_cache, iters=self.scfg.recompress_iters,
-            backend=get_backend(self.scfg.kmeans_backend)))
+            refresh_layer_cache, iters=refresh_iters,
+            backend=refresh_backend))
         self._n_generate_calls = 0
 
     def _refresh_tree(self, c, last):

@@ -2,7 +2,10 @@
 
 Public API:
   StreamConfig, StreamState, StreamingClusterer — online engine
-      (init / update / query, pure-functional jit-able state)
+      (init / update / query, pure-functional jit-able state);
+      ``StreamConfig.from_spec`` derives the config from a declarative
+      ``repro.core.ClusterSpec`` (``StreamingClusterer`` also accepts one
+      directly, as does ``SampledKMeans.partial_fit`` one level up)
   summarize_chunk, fold_coreset, reseed_dead_centers, fold_and_merge
       — the engine's stages, exposed for composition
   make_sharded_update — shard_map variant along the ``data`` mesh axis

@@ -15,16 +15,23 @@ from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
+from repro.core.spec import ClusterSpec
+
 from .engine import StreamingClusterer, StreamState, fold_and_merge, summarize_chunk
 
 
-def make_sharded_update(clusterer: StreamingClusterer,
-                        mesh: jax.sharding.Mesh, *, axis: str = "data"):
+def make_sharded_update(clusterer: StreamingClusterer | ClusterSpec,
+                        mesh: jax.sharding.Mesh, *, axis: str | None = None):
     """Build ``fn(state, chunk) -> state`` where ``chunk`` is (C, d) sharded
     along ``axis`` and the state is replicated.  ``cfg.n_sub`` counts
     partitions *per device*; each device feature-scales its own shard (the
     partition landmarks are shard-local, mirroring the chunk-local scaling
-    of the single-device path)."""
+    of the single-device path).  A :class:`ClusterSpec` is accepted in place
+    of a clusterer (``axis`` then defaults to its ``execution.mesh_axis``)."""
+    if isinstance(clusterer, ClusterSpec):
+        axis = axis or clusterer.execution.mesh_axis
+        clusterer = StreamingClusterer(clusterer)
+    axis = axis or "data"
     cfg = clusterer.cfg
     backend = clusterer.backend
 

@@ -38,9 +38,9 @@ from repro.core.backend import BackendSpec, LloydBackend, get_backend
 from repro.core.kmeans import kmeans, pairwise_sqdist
 from repro.core.metrics import sse as sse_fn
 from repro.core.pipeline import local_stage
-from repro.core.subcluster import (equal_partition, feature_scale,
-                                   gather_partitions, unequal_partition,
-                                   unscale)
+from repro.core.spec import ClusterSpec
+from repro.core.subcluster import (feature_scale, gather_partitions,
+                                   get_partitioner, unscale)
 
 Array = jax.Array
 
@@ -71,6 +71,27 @@ class StreamConfig:
     init_mode: str = "kmeans++"    # local-stage init
     backend: str = "auto"          # LloydBackend name (repro.core.backend)
 
+    @classmethod
+    def from_spec(cls, spec: ClusterSpec, **overrides) -> "StreamConfig":
+        """Derive the streaming hyper-parameters from a
+        :class:`~repro.core.spec.ClusterSpec`: the partition/local sections
+        configure the chunk summarisation, the merge section the coreset
+        merge.  Stream-only knobs (``buffer_size``, ``decay``,
+        ``reseed_threshold``) keep their defaults unless overridden."""
+        base = dict(
+            k=spec.merge.k,
+            n_sub=spec.partition.n_sub,
+            compression=spec.local.compression,
+            scheme=spec.partition.scheme,
+            capacity_factor=spec.partition.capacity_factor,
+            local_iters=spec.local.iters,
+            merge_iters=spec.merge.iters,
+            init_mode=spec.local.init,
+            backend=spec.execution.backend,
+        )
+        base.update(overrides)
+        return cls(**base)
+
 
 def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
                     backend: BackendSpec = None) -> tuple[Array, Array]:
@@ -81,13 +102,7 @@ def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
     then partitioned and vmap-k-means'd; centers come back in input space.
     """
     xs, params = feature_scale(chunk)
-    if cfg.scheme == "equal":
-        part = equal_partition(xs, cfg.n_sub)
-    elif cfg.scheme == "unequal":
-        part = unequal_partition(xs, cfg.n_sub,
-                                 capacity_factor=cfg.capacity_factor)
-    else:
-        raise ValueError(f"unknown scheme {cfg.scheme!r}")
+    part = get_partitioner(cfg.scheme)(xs, cfg.n_sub, cfg.capacity_factor)
     parts, part_w = gather_partitions(xs, part)
     k_local = max(1, parts.shape[1] // cfg.compression)
     local = local_stage(parts, part_w, k_local, iters=cfg.local_iters,
@@ -178,8 +193,10 @@ class StreamingClusterer:
     ``update`` recompiles per distinct chunk shape — feed fixed-size chunks.
     """
 
-    def __init__(self, cfg: StreamConfig, *,
+    def __init__(self, cfg: StreamConfig | ClusterSpec, *,
                  backend: BackendSpec = None, jit: bool = True):
+        if isinstance(cfg, ClusterSpec):
+            cfg = StreamConfig.from_spec(cfg)
         self.cfg = cfg
         # resolve once (env/auto) so update/query/shard_map share one backend
         self.backend: LloydBackend = get_backend(

@@ -23,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans, update_centers
+from repro.core.spec import ClusterSpec
 
 Array = jax.Array
 
@@ -30,7 +31,8 @@ Array = jax.Array
 def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
                             wk: Array, wv: Array, w_valid: Array,
                             *, iters: int = 4, key: Array | None = None,
-                            backend: BackendSpec = None
+                            backend: BackendSpec = None,
+                            spec: ClusterSpec | None = None,
                             ) -> tuple[Array, Array, Array]:
     """Fold window keys/values into the centroid set.
 
@@ -45,6 +47,11 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
     only move them onto window keys (a zero-weight point at its old
     position attracts nothing it keeps).
     """
+    if spec is not None:
+        # the refresh IS the spec's merge stage (warm-started, centroids as
+        # the coreset) — iters/backend come from the merge/execution sections
+        iters = spec.merge.iters
+        backend = backend if backend is not None else spec.execution.backend
     if key is None:
         key = jax.random.PRNGKey(0)
     be = get_backend(backend)
@@ -78,7 +85,8 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
 
 def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
                         key: Array | None = None,
-                        backend: BackendSpec = None) -> dict:
+                        backend: BackendSpec = None,
+                        spec: ClusterSpec | None = None) -> dict:
     """Refresh a stacked clustered cache dict as built by
     ``init_clustered_cache``: kc/vc (L, B, kv, n, dh), counts (L, B, kv, n),
     wk/wv (L, B, kv, W, dh), slot_pos (L, W).  ``pos`` is the *position of
@@ -94,6 +102,7 @@ def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
     v4 = jnp.broadcast_to(v4, cache["counts"].shape[:3] + (window,))
     kc, vc, counts = refresh_clustered_cache(
         cache["kc"], cache["vc"], cache["counts"],
-        cache["wk"], cache["wv"], v4, iters=iters, key=key, backend=backend)
+        cache["wk"], cache["wv"], v4, iters=iters, key=key, backend=backend,
+        spec=spec)
     return dict(cache, kc=kc, vc=vc, counts=counts,
                 slot_pos=jnp.full_like(cache["slot_pos"], -1))

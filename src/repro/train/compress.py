@@ -21,17 +21,19 @@ import jax.numpy as jnp
 
 from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans
+from repro.core.spec import ClusterSpec
 
 
 def quantize_leaf(g: jax.Array, levels: int, key,
-                  backend: BackendSpec = None) -> tuple[jax.Array, dict]:
+                  backend: BackendSpec = None, *, iters: int = 8,
+                  init: str = "landmark") -> tuple[jax.Array, dict]:
     """-> (dequantized g, {codebook, indices-free stats}).  1-D k-means on a
     value sample (equal-sized subclustering over the sorted sample = the
     paper's Algorithm 1 in one dimension)."""
     flat = g.reshape(-1, 1).astype(jnp.float32)
     n = flat.shape[0]
     samp = flat[:: max(1, n // 4096)][:4096]
-    res = kmeans(samp, levels, iters=8, key=key, init="landmark",
+    res = kmeans(samp, levels, iters=iters, key=key, init=init,
                  backend=backend)
     code = res.centers[:, 0]                       # (levels,)
     idx = jnp.argmin(jnp.abs(flat - code[None, :]), axis=-1)
@@ -40,8 +42,20 @@ def quantize_leaf(g: jax.Array, levels: int, key,
 
 
 def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
-                         seed: int = 0, backend: BackendSpec = None):
-    """Returns (compress_fn(grads, residual) -> (grads', residual'), init_residual)."""
+                         seed: int = 0, backend: BackendSpec = None,
+                         spec: ClusterSpec | None = None):
+    """Returns (compress_fn(grads, residual) -> (grads', residual'), init_residual).
+
+    With ``spec=`` the codebook fit is declared as a ClusterSpec: ``merge.k``
+    is the level count, ``merge.iters``/``merge.init`` configure the 1-D
+    k-means, ``execution.backend`` the Lloyd machinery.
+    """
+    if spec is not None:
+        levels = spec.merge.k
+        iters, init = spec.merge.iters, spec.merge.init
+        backend = backend if backend is not None else spec.execution.backend
+    else:
+        iters, init = 8, "landmark"
     be = get_backend(backend)
 
     def compress(grads, residual=None):
@@ -52,7 +66,8 @@ def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
         for i, (g, r) in enumerate(zip(leaves, res_leaves)):
             gc = g + r if error_feedback else g
             key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
-            deq, _ = quantize_leaf(gc, levels, key, backend=be)
+            deq, _ = quantize_leaf(gc, levels, key, backend=be,
+                                   iters=iters, init=init)
             out.append(deq)
             new_res.append((gc - deq) if error_feedback else r)
         return (jax.tree.unflatten(treedef, out),

@@ -1,0 +1,339 @@
+"""The unified ClusterSpec + SampledKMeans facade (repro.api / core.spec):
+serialization round-trips, facade/direct parity, registry errors, the
+kmeans|| init, and the deprecation/misconfiguration warnings."""
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.api import SampledKMeans, execute, plan
+from repro.core import (ClusterSpec, ExecutionSpec, LocalSpec, MergeSpec,
+                        PartitionSpec, kmeans, sampled_kmeans)
+from repro.data.synthetic import blobs
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    pts, labels, _ = blobs(2000, n_clusters=5, dim=2, seed=7)
+    return jnp.asarray(pts), labels
+
+
+SPEC = ClusterSpec(
+    partition=PartitionSpec(scheme="equal", n_sub=8),
+    local=LocalSpec(compression=5, iters=8),
+    merge=MergeSpec(k=5, iters=15),
+)
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec serialization + helpers
+# ---------------------------------------------------------------------------
+
+def test_spec_dict_roundtrip():
+    spec = ClusterSpec(
+        partition=PartitionSpec(scheme="unequal", n_sub=12,
+                                capacity_factor=1.5),
+        local=LocalSpec(compression=10, iters=6, init="random"),
+        merge=MergeSpec(k=7, iters=30, weighted=True, restarts=2,
+                        init="kmeans||"),
+        execution=ExecutionSpec(backend="jnp", mode="single",
+                                mesh_axis="x", donate=True),
+        scale=False,
+    )
+    # through plain JSON, as benchmarks/run.py --spec consumes it
+    restored = ClusterSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert restored == spec
+
+
+def test_spec_from_dict_defaults_and_unknown_keys():
+    assert (ClusterSpec.from_dict({"merge": {"k": 3}})
+            == ClusterSpec(merge=MergeSpec(k=3)))
+    with pytest.raises(ValueError, match="unknown merge keys"):
+        ClusterSpec.from_dict({"merge": {"k": 3, "iterz": 9}})
+    with pytest.raises(ValueError, match="unknown top-level"):
+        ClusterSpec.from_dict({"merge": {"k": 3}, "extra": 1})
+
+
+def test_spec_backend_instance_serializes_by_name():
+    from repro.core import get_backend
+    spec = ClusterSpec(merge=MergeSpec(k=3),
+                       execution=ExecutionSpec(backend=get_backend("jnp")))
+    assert spec.to_dict()["execution"]["backend"] == "jnp"
+
+
+def test_spec_make_matches_nested():
+    flat = ClusterSpec.make(5, scheme="equal", n_sub=8, compression=5,
+                            local_iters=8, global_iters=15)
+    assert flat == SPEC
+
+
+def test_spec_replace_reaches_subspecs():
+    s2 = SPEC.replace(n_sub=32, k=9, mode="stream", scale=False)
+    assert s2.partition.n_sub == 32 and s2.merge.k == 9
+    assert s2.execution.mode == "stream" and s2.scale is False
+    assert SPEC.partition.n_sub == 8  # original untouched
+    with pytest.raises(TypeError, match="unknown field"):
+        SPEC.replace(bogus=1)
+
+
+def test_execution_mode_validated():
+    with pytest.raises(ValueError, match="unknown execution mode"):
+        ExecutionSpec(mode="mapreduce")
+
+
+# ---------------------------------------------------------------------------
+# Planner: registry validation + mode resolution
+# ---------------------------------------------------------------------------
+
+def test_plan_registry_errors():
+    with pytest.raises(ValueError, match="unknown partition scheme"):
+        plan(SPEC.replace(scheme="voronoi"))
+    with pytest.raises(ValueError, match="unknown init scheme"):
+        plan(SPEC.replace(local=LocalSpec(init="farthest")))
+    with pytest.raises(ValueError, match="unknown k-means backend"):
+        plan(SPEC.replace(backend="cuda"))
+
+
+def test_plan_mode_resolution():
+    assert plan(SPEC).mode == "single"
+    mesh = compat.make_mesh((1,), ("data",))
+    assert plan(SPEC, mesh=mesh).mode == "shard_map"
+    assert plan(SPEC.replace(mode="stream")).mode == "stream"
+    with pytest.raises(ValueError, match="needs a mesh"):
+        plan(SPEC.replace(mode="shard_map"))
+    with pytest.raises(ValueError, match="no 'rows' axis"):
+        plan(SPEC.replace(mesh_axis="rows"), mesh=mesh)
+    plan(SPEC, (128, 2), mesh=mesh)  # 128 rows over 1 device: fine
+
+
+def test_custom_registry_entries_flow_through_plan(dataset):
+    from repro.core import (get_init, register_init, register_partitioner,
+                            equal_partition)
+    register_init("pp_alias", get_init("kmeans++"))
+    register_partitioner("equal_alias",
+                         lambda x, n_sub, cf: equal_partition(x, n_sub))
+    x, _ = dataset
+    spec = SPEC.replace(scheme="equal_alias",
+                        local=LocalSpec(compression=5, iters=8,
+                                        init="pp_alias"))
+    res = execute(plan(spec), x, jax.random.PRNGKey(0))
+    ref = execute(plan(SPEC), x, jax.random.PRNGKey(0))
+    np.testing.assert_array_equal(np.asarray(res.centers),
+                                  np.asarray(ref.centers))
+
+
+# ---------------------------------------------------------------------------
+# Facade parity + estimator surface
+# ---------------------------------------------------------------------------
+
+def test_fit_bit_for_bit_vs_sampled_kmeans(dataset):
+    x, _ = dataset
+    key = jax.random.PRNGKey(3)
+    ref = sampled_kmeans(x, 5, spec=SPEC, key=key)
+    est = SampledKMeans(SPEC).fit(x, key=key)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(est.centers_))
+    assert float(ref.sse) == float(est.sse_)
+
+
+def test_fit_shard_map_bit_for_bit_vs_distributed(dataset):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import make_distributed_sampled_kmeans
+    x, _ = dataset
+    mesh = compat.make_mesh((1,), ("data",))
+    xd = jax.device_put(x, NamedSharding(mesh, P("data")))
+    key = jax.random.PRNGKey(0)
+    ref = make_distributed_sampled_kmeans(mesh, spec=SPEC)(xd, key)
+    est = SampledKMeans(SPEC, mesh=mesh).fit(xd, key=key)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(est.centers_))
+    assert float(ref.sse) == float(est.sse_)
+
+
+def test_fit_stream_bit_for_bit_vs_streaming_clusterer(dataset):
+    from repro.stream import StreamConfig, StreamingClusterer
+    x, _ = dataset
+    key = jax.random.PRNGKey(5)
+    spec = SPEC.replace(mode="stream")
+    sc = StreamingClusterer(StreamConfig.from_spec(spec))
+    state = sc.init(dim=2, key=key)
+    state = sc.update(state, x)
+    est = SampledKMeans(spec).fit(x, key=key)
+    np.testing.assert_array_equal(np.asarray(state.centers),
+                                  np.asarray(est.centers_))
+
+
+def test_partial_fit_matches_stream_engine(dataset):
+    from repro.stream import StreamConfig, StreamingClusterer
+    x, _ = dataset
+    chunks = [x[:1000], x[1000:]]
+    key = jax.random.PRNGKey(9)
+    est = SampledKMeans(SPEC, buffer_size=256, decay=0.9)
+    sc = StreamingClusterer(StreamConfig.from_spec(
+        SPEC, buffer_size=256, decay=0.9))
+    state = sc.init(dim=2, key=key)
+    for ch in chunks:
+        est.partial_fit(ch, key=key)
+        state = sc.update(state, ch)
+    np.testing.assert_array_equal(np.asarray(state.centers),
+                                  np.asarray(est.centers_))
+    assert int(est.stream_state.step) == 2
+
+
+def test_predict_score_transform_consistent(dataset):
+    x, _ = dataset
+    est = SampledKMeans(SPEC).fit(x, key=jax.random.PRNGKey(0))
+    idx = np.asarray(est.predict(x))
+    d2 = np.asarray(est.transform(x))
+    np.testing.assert_array_equal(idx, d2.argmin(axis=1))
+    # score = -sum of nearest squared distances; sse_ is the same quantity
+    # computed by the fit on the same centers
+    np.testing.assert_allclose(float(est.score(x)),
+                               -float(d2.min(axis=1).sum()), rtol=1e-5)
+    np.testing.assert_allclose(-float(est.score(x)), float(est.sse_),
+                               rtol=1e-5)
+
+
+def test_unfitted_estimator_raises(dataset):
+    x, _ = dataset
+    with pytest.raises(RuntimeError, match="fit"):
+        SampledKMeans(SPEC).predict(x)
+
+
+def test_facade_int_shorthand(dataset):
+    x, _ = dataset
+    est = SampledKMeans(5).fit(x)
+    assert est.centers_.shape == (5, 2)
+
+
+def test_sampled_kmeans_spec_k_mismatch(dataset):
+    x, _ = dataset
+    with pytest.raises(ValueError, match="disagrees"):
+        sampled_kmeans(x, 4, spec=SPEC)
+    with pytest.raises(TypeError, match="not both"):
+        sampled_kmeans(x, 5, spec=SPEC, n_sub=4)
+
+
+# ---------------------------------------------------------------------------
+# kmeans|| seeding
+# ---------------------------------------------------------------------------
+
+def test_kmeans_parallel_quality_smoke(dataset):
+    x, _ = dataset
+    key = jax.random.PRNGKey(0)
+    par = kmeans(x, 5, init="kmeans||", key=key, restarts=4)
+    pp = kmeans(x, 5, init="kmeans++", key=key, restarts=4)
+    assert float(par.sse) <= float(pp.sse) * 1.15, (
+        float(par.sse), float(pp.sse))
+
+
+def test_kmeans_parallel_oversample_exceeding_m():
+    # 2k > m must clamp the per-round draw, not crash lax.top_k
+    from repro.core import kmeans_parallel_init
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(150, 2)),
+                    jnp.float32)
+    w = jnp.ones((150,), jnp.float32)
+    centers = kmeans_parallel_init(x, w, 100, jax.random.PRNGKey(0))
+    assert centers.shape == (100, 2)
+    assert bool(jnp.all(jnp.isfinite(centers)))
+
+
+def test_replace_ambiguous_field_raises():
+    with pytest.raises(TypeError, match="ambiguous"):
+        SPEC.replace(iters=50)     # local.iters vs merge.iters
+    with pytest.raises(TypeError, match="ambiguous"):
+        SPEC.replace(init="random")
+
+
+def test_standard_kmeans_spec_k_mismatch(dataset):
+    from repro.core import standard_kmeans
+    x, _ = dataset
+    with pytest.raises(ValueError, match="disagrees"):
+        standard_kmeans(x, 4, spec=SPEC)   # SPEC has k=5
+
+
+def test_kmeans_parallel_respects_weights():
+    # zero-weight points must never be chosen as (or attract) candidates
+    from repro.core import kmeans_parallel_init
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.concatenate([rng.normal(size=(50, 2)),
+                                    100.0 + rng.normal(size=(10, 2))]),
+                    jnp.float32)
+    w = jnp.asarray(np.concatenate([np.ones(50), np.zeros(10)]), jnp.float32)
+    centers = kmeans_parallel_init(x, w, 4, jax.random.PRNGKey(1))
+    assert np.asarray(centers).max() < 50.0  # far blob is weightless
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing into the satellite subsystems
+# ---------------------------------------------------------------------------
+
+def test_refresh_clustered_cache_accepts_spec():
+    from repro.stream.kv import refresh_clustered_cache
+    rng = np.random.default_rng(0)
+    kc = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 4, 8)), jnp.float32)
+    counts = jnp.ones((2, 4), jnp.float32)
+    wk = jnp.asarray(rng.normal(size=(2, 6, 8)), jnp.float32)
+    wv = jnp.asarray(rng.normal(size=(2, 6, 8)), jnp.float32)
+    valid = jnp.ones((2, 6), jnp.float32)
+    spec = ClusterSpec(merge=MergeSpec(k=4, iters=3),
+                       execution=ExecutionSpec(backend="jnp"))
+    a = refresh_clustered_cache(kc, vc, counts, wk, wv, valid, spec=spec)
+    b = refresh_clustered_cache(kc, vc, counts, wk, wv, valid,
+                                iters=3, backend="jnp")
+    for xa, xb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+    # total mass conserved either way
+    np.testing.assert_allclose(float(a[2].sum()),
+                               float(counts.sum() + valid.sum()), rtol=1e-5)
+
+
+def test_grad_compressor_accepts_spec():
+    from repro.train.compress import make_grad_compressor
+    g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(64, 8)),
+                          jnp.float32)}
+    by_spec = make_grad_compressor(spec=ClusterSpec(
+        merge=MergeSpec(k=16, iters=8, init="landmark")))
+    by_kwargs = make_grad_compressor(levels=16)
+    ga, _ = by_spec(g)
+    gb, _ = by_kwargs(g)
+    np.testing.assert_array_equal(np.asarray(ga["w"]), np.asarray(gb["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Deprecations + misconfiguration warnings (satellites)
+# ---------------------------------------------------------------------------
+
+def test_flat_kwargs_deprecation(dataset):
+    x, _ = dataset
+    with pytest.warns(DeprecationWarning, match="flat"):
+        sampled_kmeans(x, 5, n_sub=8, compression=5, key=jax.random.PRNGKey(0))
+
+
+def test_assign_fn_deprecation(dataset):
+    x, _ = dataset
+    from repro.core.kmeans import assign_jnp
+    with pytest.warns(DeprecationWarning, match="assign_fn"):
+        kmeans(x, 4, iters=2, key=jax.random.PRNGKey(0),
+               assign_fn=assign_jnp)
+
+
+def test_unequal_capacity_clamp_warns():
+    from repro.core import unequal_partition
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(64, 2)),
+                    jnp.float32)
+    with pytest.warns(UserWarning, match="clamping to M"):
+        unequal_partition(x, 2, capacity_factor=3.0)  # 32*3 > 64
+    with pytest.warns(UserWarning, match="WILL be dropped"):
+        part = unequal_partition(x, 4, capacity_factor=0.25)
+    # n_dropped stays exact: all points - kept slots
+    kept = int(part.mask.sum())
+    assert int(part.n_dropped) == 64 - kept
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        unequal_partition(x, 4, capacity_factor=2.0)  # sane config: silent

@@ -21,7 +21,8 @@ it asserts numerics only.  Either way the figures land in
 import os
 import sys
 
-if "--lloyd" not in sys.argv and "--api" not in sys.argv:
+if ("--lloyd" not in sys.argv and "--api" not in sys.argv
+        and "--levels" not in sys.argv):
     # the roofline cells pretend to be a 512-chip pod; the Lloyd bench wants
     # the real device so its timings mean something
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -313,8 +314,83 @@ def run_api_bench(n: int, d: int, k: int, *, timing_iters: int = 5,
     return entry
 
 
+def run_levels_bench(n: int, d: int, k: int, *, timing_iters: int = 3,
+                     max_sse_ratio: float = 1.25) -> dict:
+    """Hierarchical reduce tree vs the flat two-level merge.
+
+    Fits the same blobs workload with ``levels=()`` and with one extra
+    reduce level, recording wall-clock, SSE ratio and the representative-
+    pool schedule (the hierarchy's point: the merge stage sees
+    ``pool[-1]`` rows instead of ``pool[0]``).  SSE quality is asserted in
+    every mode; timing is reported but only meaningful on compiled
+    backends.  Lands in ``benchmarks/artifacts/BENCH_levels_*.json``.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fit_from_spec
+    from repro.core.spec import ClusterSpec, LevelSpec
+    from repro.data.synthetic import blobs
+
+    flat = ClusterSpec.make(k, n_sub=64, compression=5, local_iters=6,
+                            global_iters=10)
+    hier = flat.replace(levels=(LevelSpec(n_sub=16, compression=4,
+                                          iters=6),))
+    pts, _, _ = blobs(n, n_clusters=k, dim=d, seed=0)
+    x = jnp.asarray(pts)
+    key = jax.random.PRNGKey(0)
+
+    def med(spec):
+        fit = jax.jit(fit_from_spec, static_argnames=("spec",))
+        sse = float(jax.block_until_ready(fit(x, spec, key).sse))  # warm
+        ts = []
+        for _ in range(timing_iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fit(x, spec, key).sse)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), sse
+
+    t_flat, sse_flat = med(flat)
+    t_hier, sse_hier = med(hier)
+    entry = {
+        "bench": "hierarchical_levels",
+        "shape": {"n": n, "d": d, "k": k},
+        "pool_flat": list(flat.pool_schedule(n)),
+        "pool_hier": list(hier.pool_schedule(n)),
+        "us_flat": t_flat * 1e6,
+        "us_hier": t_hier * 1e6,
+        "speedup": t_flat / t_hier,
+        "sse_flat": sse_flat,
+        "sse_hier": sse_hier,
+        "sse_ratio": sse_hier / sse_flat,
+    }
+    PERF.parent.mkdir(parents=True, exist_ok=True)
+    out = PERF.parent / f"BENCH_levels_N{n}_d{d}_K{k}.json"
+    out.write_text(json.dumps(entry, indent=1))
+    entry["json"] = str(out)
+    if max_sse_ratio is not None:
+        assert entry["sse_ratio"] <= max_sse_ratio, (
+            f"hierarchical SSE {entry['sse_ratio']:.3f}x flat "
+            f"(allowed {max_sse_ratio}x)")
+    return entry
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    if "--levels" in sys.argv:
+        ap.add_argument("--levels", action="store_true")
+        ap.add_argument("--n", type=int, default=200_000)
+        ap.add_argument("--d", type=int, default=8)
+        ap.add_argument("--k", type=int, default=64)
+        ap.add_argument("--timing-iters", type=int, default=3)
+        ap.add_argument("--max-sse-ratio", type=float, default=1.25,
+                        help="assert hierarchical SSE <= this x flat")
+        args = ap.parse_args()
+        e = run_levels_bench(args.n, args.d, args.k,
+                             timing_iters=args.timing_iters,
+                             max_sse_ratio=args.max_sse_ratio)
+        print(json.dumps(e, indent=1))
+        sys.exit(0)
     if "--api" in sys.argv:
         ap.add_argument("--api", action="store_true")
         ap.add_argument("--n", type=int, default=100_000)

@@ -78,8 +78,11 @@ def main():
             res = fn(xd, jax.random.PRNGKey(0))
             jax.block_until_ready(res.sse)
             dt = time.perf_counter() - t0
+            # distributed results are in input space now — directly
+            # comparable to the serial rows above
             print(f"shard_map x{ndev} ({merge:11s}): {dt:8.2f}s  "
-                  f"sse(scaled)={float(res.sse):.2f}")
+                  f"sse={float(res.sse):.1f}  "
+                  f"rel_err={relative_error(float(res.sse), float(full.sse)):+.2%}")
 
 
 if __name__ == "__main__":

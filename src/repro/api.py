@@ -51,16 +51,25 @@ Array = jax.Array
 @dataclasses.dataclass(frozen=True)
 class ExecutionPlan:
     """A resolved spec: concrete mode, one backend instance, validated
-    registry entries.  Build with :func:`plan`, run with :func:`execute`."""
+    registry entries.  ``schedule`` is the reduce-tree level schedule
+    (base stage + ``spec.levels``) the planner validated, exposed for
+    introspection/sizing — the executors themselves derive the identical
+    schedule from ``spec`` (the spec is the jit-static source of truth).
+    Build with :func:`plan`, run with :func:`execute`."""
     spec: ClusterSpec
     mode: str                      # "single" | "shard_map" | "stream"
     backend: LloydBackend          # resolved once, shared by every stage
     mesh: Optional[jax.sharding.Mesh] = None
     data_shape: Optional[tuple] = None
+    schedule: tuple = ()           # tuple[LevelSpec, ...], base level first
 
     @property
     def k(self) -> int:
         return self.spec.merge.k
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.schedule)
 
 
 def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
@@ -75,15 +84,31 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
     of the points, when known) is recorded for downstream sizing and lets
     the planner reject shard_map runs whose rows don't divide over the mesh.
     """
-    # registry validation: fail fast, with the known-names list
+    # registry validation: fail fast, with the known-names list (the extra
+    # reduce levels resolve against the same partitioner/init registries)
     get_partitioner(spec.partition.scheme)
     get_init(spec.local.init)
     get_init(spec.merge.init)
+    for lvl in spec.levels:
+        get_partitioner(lvl.scheme)
+        get_init(lvl.init)
     backend = get_backend(spec.execution.backend)
+    schedule = spec.level_schedule()
 
     mode = spec.execution.mode
     if mode == "auto":
         mode = "shard_map" if mesh is not None else "single"
+    if (mode == "single" and data_shape is not None and len(data_shape) >= 1
+            and spec.pool_schedule(int(data_shape[0]))[-1] < spec.merge.k):
+        # the equal-scheme pool accounting is exact for single mode; the
+        # shard_map pool sizes per device and the stream merge runs on the
+        # coreset buffer, so only reject here where the math is certain
+        raise ValueError(
+            f"plan: the reduce tree leaves only "
+            f"{spec.pool_schedule(int(data_shape[0]))[-1]} representatives "
+            f"for a k={spec.merge.k} merge — drop a level or lower its "
+            f"compression (pool schedule: "
+            f"{spec.pool_schedule(int(data_shape[0]))})")
     if mode == "shard_map":
         if mesh is None:
             raise ValueError("plan: mode='shard_map' needs a mesh= "
@@ -99,7 +124,7 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
                     f"plan: {data_shape[0]} rows do not divide over "
                     f"{n_dev} devices along {axis!r}")
     return ExecutionPlan(spec=spec, mode=mode, backend=backend, mesh=mesh,
-                         data_shape=data_shape)
+                         data_shape=data_shape, schedule=schedule)
 
 
 def execute(pl: ExecutionPlan, x: Array,

@@ -26,9 +26,9 @@ from .kmeans import (KMeansResult, assign_jnp, available_inits, get_init,
                      random_init, register_init, update_centers)
 from .metrics import clustering_accuracy, relative_error, sse
 from .pipeline import (SampledClusteringResult, fit_from_spec, local_stage,
-                       sampled_kmeans, standard_kmeans)
-from .spec import (ClusterSpec, ExecutionSpec, LocalSpec, MergeSpec,
-                   PartitionSpec)
+                       reduce_pool, sampled_kmeans, standard_kmeans)
+from .spec import (ClusterSpec, ExecutionSpec, LevelSpec, LocalSpec,
+                   MergeSpec, PartitionSpec)
 from .subcluster import (Partition, available_partitioners, equal_partition,
                          feature_scale, gather_partitions, get_partitioner,
                          register_partitioner, unequal_landmarks,
@@ -38,7 +38,7 @@ from .distributed import (DistributedClusteringResult,
 
 __all__ = [
     "ClusterSpec", "PartitionSpec", "LocalSpec", "MergeSpec",
-    "ExecutionSpec",
+    "ExecutionSpec", "LevelSpec",
     "KMeansResult", "kmeans", "kmeans_lloyd_step", "assign_jnp",
     "kmeans_pp_init", "kmeans_parallel_init", "landmark_init", "random_init",
     "pairwise_sqdist", "update_centers",
@@ -47,7 +47,8 @@ __all__ = [
     "register_partitioner", "get_partitioner", "available_partitioners",
     "feature_scale", "unscale", "gather_partitions", "unequal_landmarks",
     "SampledClusteringResult", "fit_from_spec", "sampled_kmeans",
-    "standard_kmeans", "local_stage", "DistributedClusteringResult",
+    "standard_kmeans", "local_stage", "reduce_pool",
+    "DistributedClusteringResult",
     "make_distributed_sampled_kmeans", "sse", "relative_error",
     "clustering_accuracy", "LloydBackend", "PallasBackend",
     "PallasFusedBackend", "get_backend", "register_backend",

@@ -17,10 +17,17 @@ Straggler mitigation falls out of the fixed-iteration Lloyd loop (every
 subcluster costs the same — no data-dependent tail) plus equal-capacity
 partitions; elastic scaling falls out of axis-name-based specs (the same code
 runs on any mesh that has a ``data`` axis).
+
+With ``spec.levels`` set, the hierarchical reduce tree runs *between* the
+local stage and the merge: each extra level re-partitions the device's own
+weighted center pool and shrinks it with another round of weighted local
+k-means — entirely collective-free — so the merge's all_gather moves the
+last (smallest) pool instead of all ``P_total * k_local`` representatives.
 """
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -30,18 +37,21 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 from .backend import BackendSpec, LloydBackend, get_backend
-from .kmeans import kmeans
+from .kmeans import kmeans, pairwise_sqdist
+from .pipeline import reduce_pool
 from .spec import ClusterSpec
-from .subcluster import gather_partitions, get_partitioner
+from .subcluster import gather_partitions, get_partitioner, unscale
 
 Array = jax.Array
 
 
 class DistributedClusteringResult(NamedTuple):
-    centers: Array        # (k, d) — replicated
-    local_centers: Array  # (P_total * k_local, d) — gathered representatives
-    local_weights: Array  # (P_total * k_local,)
-    sse: Array            # () global SSE (scaled space)
+    centers: Array        # (k, d) — replicated, in the *input* space
+    local_centers: Array  # (pool, d) — gathered representatives the merge
+    #                       saw, input space (P_total * k_local flat; the
+    #                       last reduce level's gathered pool with levels)
+    local_weights: Array  # (pool,)
+    sse: Array            # () global SSE, input space
 
 
 def _global_feature_scale(xs: Array, axis: str, eps: float = 1e-9):
@@ -66,10 +76,11 @@ def _distributed_merge(
     weighted sums/counts — with the fused backend that is a single pass and
     no HBM one-hot), one psum of (k*d + k) floats, replicated update.
     """
-    # Deterministic, replicated init: gather a candidate pool and run greedy
-    # farthest-point (k-center) selection — identical on every device.
-    # Stride across this device's local centers so the pool spans every
-    # partition (partition 0's centers all sit near the landmark L).
+    # Replicated init: gather a candidate pool and run greedy farthest-point
+    # (k-center) selection — identical on every device (the key is
+    # replicated, so the jitter fallback below is too).  Stride across this
+    # device's local centers so the pool spans every partition (partition
+    # 0's centers all sit near the landmark L).
     n_local = local_centers.shape[0]
     n_cand = min(n_local, max(2 * k, 8))
     stride_ids = jnp.round(jnp.linspace(0, n_local - 1, n_cand)).astype(jnp.int32)
@@ -79,10 +90,23 @@ def _distributed_merge(
     centers0 = jnp.zeros((k, cand.shape[-1]), cand.dtype).at[0].set(cand[first])
     min_d = jnp.sum((cand - cand[first]) ** 2, axis=-1)
 
+    # Jitter scale for the exhausted-pool fallback: when the gathered pool
+    # holds fewer than k live distinct candidates, greedy selection would
+    # silently emit duplicate rows (= permanently dead clusters under the
+    # keep-old-center fix-up).  Spread the surplus picks with noise scaled
+    # to the candidates' per-dimension spread instead (the same remedy
+    # kmeans(restarts>1, init=<Array>) applies to degenerate array inits).
+    sigma = (0.05 * jnp.std(cand, axis=0) + 1e-6).astype(cand.dtype)
+
     def pick(i, carry):
         centers, min_d = carry
-        nxt = jnp.argmax(jnp.where(cand_w > 0, min_d, -1.0))
+        score = jnp.where(cand_w > 0, min_d, -1.0)
+        nxt = jnp.argmax(score)
         c = cand[nxt]
+        exhausted = score[nxt] <= 0.0   # no live candidate adds spread
+        noise = sigma * jax.random.normal(jax.random.fold_in(key, i),
+                                          c.shape, c.dtype)
+        c = jnp.where(exhausted, c + noise, c)
         centers = centers.at[i].set(c)
         min_d = jnp.minimum(min_d, jnp.sum((cand - c) ** 2, axis=-1))
         return centers, min_d
@@ -112,20 +136,32 @@ def make_distributed_sampled_kmeans(
     compression: int = 5,
     local_iters: int = 10,
     global_iters: int = 25,
-    merge: str = "replicated",
+    merge: str = None,
     weighted_merge: bool = False,
     capacity_factor: float = 2.0,
     backend: BackendSpec = None,
     init: str = "kmeans++",
+    levels: tuple = None,
 ):
     """Build a jit-able ``fn(x, key) -> DistributedClusteringResult`` where
     ``x`` is (M, d) sharded along ``axis``.  This is deliverable (a)'s main
-    entry point for cluster-scale data.
+    entry point for cluster-scale data.  Centers, representatives and SSE
+    come back in the *input* space, matching
+    :func:`~repro.core.pipeline.fit_from_spec`.
 
     With ``spec=`` every stage option comes from the
     :class:`~repro.core.spec.ClusterSpec` (``spec.partition.n_sub`` counts
     subclusters *per device*; ``spec.execution.mesh_axis`` is the data
-    axis); the flat kwargs remain as the legacy spelling.
+    axis; ``spec.execution.merge_path`` picks the merge strategy;
+    ``spec.levels`` adds hierarchical reduce levels); the flat kwargs
+    remain as the legacy spelling, with ``merge=`` overriding the spec's
+    merge path when given explicitly.
+
+    ``levels`` (tuple of :class:`~repro.core.spec.LevelSpec`) runs the
+    reduce tree *per device* on its own weighted center pool — no
+    collectives — so only the final, ever-shrinking pool crosses devices:
+    all_gather bytes drop from O(P_total · k_local · d) to
+    O(P_total · pool_last/P_total · d) per fit.
     """
     if spec is not None:
         if k is not None and k != spec.merge.k:
@@ -146,25 +182,46 @@ def make_distributed_sampled_kmeans(
         merge_init = spec.merge.init
         restarts = spec.merge.restarts
         axis = axis or spec.execution.mesh_axis
+        merge = merge or spec.execution.merge_path
+        # like merge=, an explicit kwarg (e.g. levels=() to disable the
+        # tree for one run) outranks the spec
+        levels = spec.levels if levels is None else tuple(levels)
     elif k is None:
         raise TypeError("make_distributed_sampled_kmeans: pass k or spec=")
     else:
         merge_init, restarts = "kmeans++", 4
     axis = axis or "data"
+    merge = merge or "replicated"
+    levels = () if levels is None else tuple(levels)
+    if any(lvl.scheme == "unequal" for lvl in levels):
+        # fit_from_spec folds reduce_pool's dropped mass into n_dropped;
+        # DistributedClusteringResult has no such channel, so an
+        # unequal-scheme level's capacity clamp would lose mass silently
+        warnings.warn(
+            "make_distributed_sampled_kmeans: unequal-scheme reduce levels "
+            "can clamp overflow pool entries, and the distributed result "
+            "has no n_dropped channel to report that mass — prefer "
+            "equal-scheme levels (or raise capacity_factor)", stacklevel=2)
     be = get_backend(backend)
     partitioner = get_partitioner(scheme)
 
     def per_device(xs: Array, key: Array) -> DistributedClusteringResult:
         my = jax.lax.axis_index(axis)
-        key = jax.random.fold_in(key, my)
-        xn, _ = _global_feature_scale(xs, axis)
+        # Split the caller's key once per stage (like fit_from_spec): the
+        # merge half stays replicated — the merge runs identically on every
+        # device, so its key must NOT depend on the device index — while
+        # the local half is folded per device.
+        key_local, key_merge = jax.random.split(key)
+        key_dev = jax.random.fold_in(key_local, my)
+        xn, scale_params = _global_feature_scale(xs, axis)
 
         part = partitioner(xn, n_sub_per_device, capacity_factor)
         parts, part_w = gather_partitions(xn, part)
         cap = parts.shape[1]
         k_local = max(1, cap // compression)
 
-        keys = jax.random.split(jax.random.fold_in(key, 1), n_sub_per_device)
+        keys = jax.random.split(jax.random.fold_in(key_dev, 1),
+                                n_sub_per_device)
         local = jax.vmap(
             lambda p, w, kk: kmeans(p, k_local, weights=w, iters=local_iters,
                                     key=kk, init=init, backend=be)
@@ -173,6 +230,17 @@ def make_distributed_sampled_kmeans(
         d = xs.shape[-1]
         lc = local.centers.reshape(n_sub_per_device * k_local, d)
         lw = local.counts.reshape(n_sub_per_device * k_local)
+
+        # Hierarchical reduce tree, all_gather-free: every extra level
+        # re-partitions THIS device's weighted pool and shrinks it in
+        # place; no bytes cross the mesh until the final (smallest) pool.
+        # (dropped mass has no channel here — build time warns on
+        # unequal-scheme levels)
+        for i, lvl in enumerate(levels):
+            lc, lw, _ = reduce_pool(lc, lw, lvl,
+                                    jax.random.fold_in(key_dev, 2 + i),
+                                    backend=be)
+
         merge_w = lw if weighted_merge else (lw > 0).astype(xs.dtype)
 
         if merge == "replicated":
@@ -181,24 +249,24 @@ def make_distributed_sampled_kmeans(
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
             merged = kmeans(all_c, k, weights=all_w, iters=global_iters,
-                            key=jax.random.PRNGKey(17), init=merge_init,
+                            key=key_merge, init=merge_init,
                             backend=be,
                             restarts=restarts)  # same multi-seed guard as
                                                 # the batch merge stage
             centers = merged.centers
         elif merge == "distributed":
             centers = _distributed_merge(lc, merge_w, k, global_iters,
-                                         jax.random.PRNGKey(17), axis, be)
+                                         key_merge, axis, be)
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
         else:
             raise ValueError(f"unknown merge {merge!r}")
 
-        # global SSE in scaled space
-        d2 = (jnp.sum(xn * xn, -1, keepdims=True)
-              + jnp.sum(centers * centers, -1)[None, :]
-              - 2.0 * (xn @ centers.T))
-        local_sse = jnp.sum(jnp.maximum(jnp.min(d2, -1), 0.0))
+        # global SSE in the scaled space would under-report wide features;
+        # map everything back through (lo, span) and score in input space
+        centers = unscale(centers, scale_params)
+        all_c = unscale(all_c, scale_params)
+        local_sse = jnp.sum(jnp.min(pairwise_sqdist(xs, centers), axis=-1))
         total_sse = jax.lax.psum(local_sse, axis)
         return DistributedClusteringResult(centers, all_c, all_w, total_sse)
 

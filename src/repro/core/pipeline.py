@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from .backend import BackendSpec, get_backend
 from .kmeans import KMeansResult, kmeans
 from .metrics import sse as sse_fn
-from .spec import ClusterSpec
+from .spec import ClusterSpec, LevelSpec
 from .subcluster import (Partition, feature_scale, gather_partitions,
                          get_partitioner, unscale)
 
@@ -28,9 +28,13 @@ Array = jax.Array
 class SampledClusteringResult(NamedTuple):
     centers: Array          # (k, d) final centers, in the *input* space
     sse: Array              # () SSE of the input points vs final centers
-    local_centers: Array    # (P * k_local, d) the sampled representatives
-    local_weights: Array    # (P * k_local,) member counts (0 = dead slot)
-    n_dropped: Array        # () capacity overflow (Algorithm 2 only)
+    local_centers: Array    # (pool, d) the representatives the merge saw
+    #                         (P * k_local for the flat pipeline; the last
+    #                         reduce level's pool when spec.levels is set)
+    local_weights: Array    # (pool,) member counts (0 = dead slot)
+    n_dropped: Array        # () capacity overflow, in original-point units
+    #                         (Algorithm 2 partitions + unequal-scheme
+    #                         reduce levels)
 
 
 def local_stage(
@@ -56,12 +60,47 @@ def local_stage(
     )(parts, part_w, keys)
 
 
+def reduce_pool(pool: Array, pool_w: Array, level: LevelSpec, key: Array,
+                backend: BackendSpec = None) -> tuple[Array, Array, Array]:
+    """One level of the hierarchical reduce tree: re-partition a weighted
+    center pool and run the (weighted) local stage on it.
+
+    ``(n, d)`` pool + ``(n,)`` mass -> ``(n', d)`` pool + ``(n',)`` mass
+    + ``()`` dropped mass, with ``n' = level.n_sub * max(1, capacity //
+    level.compression)``.  Dead entries (mass 0) carry no weight into
+    their partition's k-means; a partition made entirely of dead entries
+    yields zero-mass representatives that stay dead at the next level.
+
+    Mass conservation: exact under the ``equal`` scheme (every entry gets
+    a slot).  The ``unequal`` scheme's capacity bound can drop overflow
+    *entries*, and each pool entry stands in for ``pool_w`` original
+    points — the third return value is that dropped mass (0.0 for
+    ``equal``), which :func:`fit_from_spec` folds into the result's
+    ``n_dropped``.
+    """
+    be = get_backend(backend)
+    part = get_partitioner(level.scheme)(pool, level.n_sub,
+                                         level.capacity_factor)
+    parts, part_w = gather_partitions(pool, part, weights=pool_w)
+    w_dropped = jnp.sum(pool_w).astype(jnp.float32) - \
+        jnp.sum(part_w).astype(jnp.float32)
+    k_local = max(1, parts.shape[1] // level.compression)
+    local = local_stage(parts, part_w, k_local, iters=level.iters, key=key,
+                        init=level.init, backend=be)
+    d = pool.shape[-1]
+    return (local.centers.reshape(level.n_sub * k_local, d),
+            local.counts.reshape(level.n_sub * k_local),
+            jnp.maximum(w_dropped, 0.0))
+
+
 def fit_from_spec(x: Array, spec: ClusterSpec,
                   key: Optional[Array] = None, *,
                   backend: BackendSpec = None) -> SampledClusteringResult:
-    """Run the full two-level pipeline as declared by ``spec`` on one
-    device.  ``backend`` overrides ``spec.execution.backend`` when the
-    caller (e.g. the planner) has already resolved an instance."""
+    """Run the full pipeline as declared by ``spec`` on one device:
+    partition -> local k-means -> (optional extra reduce levels over the
+    weighted center pool, ``spec.levels``) -> merge.  ``backend`` overrides
+    ``spec.execution.backend`` when the caller (e.g. the planner) has
+    already resolved an instance."""
     if key is None:
         key = jax.random.PRNGKey(0)
     key_local, key_global = jax.random.split(key)
@@ -84,6 +123,20 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
     n_sub = spec.partition.n_sub
     local_centers = local.centers.reshape(n_sub * k_local, d)
     local_counts = local.counts.reshape(n_sub * k_local)
+
+    # hierarchical reduce tree: recursively re-partition the weighted center
+    # pool until it is small enough for the merge stage (spec.levels is ()
+    # for the paper's flat two-level pipeline — the loop is a no-op there)
+    n_dropped = part.n_dropped
+    for i, lvl in enumerate(spec.levels):
+        local_centers, local_counts, w_dropped = reduce_pool(
+            local_centers, local_counts, lvl,
+            jax.random.fold_in(key_local, 1 + i), backend=be)
+        # unequal-scheme levels can clamp overflow ENTRIES; each carries
+        # the mass of the original points it represents — keep the loss
+        # visible in the same n_dropped channel as the base partition
+        n_dropped = n_dropped + jnp.round(w_dropped).astype(jnp.int32)
+
     merge_w = (local_counts if spec.merge.weighted
                else (local_counts > 0).astype(x.dtype))
 
@@ -98,7 +151,7 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
         local_centers = unscale(local_centers, params)
     total_sse = sse_fn(x, centers)
     return SampledClusteringResult(centers, total_sse, local_centers,
-                                   local_counts, part.n_dropped)
+                                   local_counts, n_dropped)
 
 
 _SPEC_KWARGS = ("scheme", "n_sub", "compression", "local_iters",

@@ -30,6 +30,7 @@ from typing import Any, Mapping, Optional
 from .backend import BackendSpec, LloydBackend
 
 _MODES = ("auto", "single", "shard_map", "stream")
+_MERGE_PATHS = ("replicated", "distributed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +61,27 @@ class LocalSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class LevelSpec:
+    """One extra level of the hierarchical reduce tree.
+
+    Once the pool of weighted local centers is itself "a large dataset"
+    (``P_total * k_local`` representatives at pod scale), the paper's own
+    argument recurses: re-partition the *pool*, run the weighted local
+    stage on it, and hand the merge an ever smaller pool.  A
+    :class:`ClusterSpec` holds a tuple of these in ``levels`` — each entry
+    shrinks the current pool by roughly ``compression`` before the merge
+    stage runs.  ``scheme`` resolves against the partitioner registry and
+    ``init`` against the init registry, exactly like the base stage.
+    """
+    n_sub: int = 8
+    compression: int = 4
+    iters: int = 8
+    init: str = "kmeans++"
+    scheme: str = "equal"
+    capacity_factor: float = 2.0
+
+
+@dataclasses.dataclass(frozen=True)
 class MergeSpec:
     """The merge ("host part") k-means over the sampled representatives.
 
@@ -85,30 +107,49 @@ class ExecutionSpec:
     (shard_map when a mesh is supplied, else single).  ``mesh_axis`` is the
     mesh axis the data is sharded along; ``donate`` lets jit reuse the input
     buffer for single-mode fits (the points are consumed anyway).
+    ``merge_path`` picks the shard_map merge strategy: ``"replicated"``
+    (all_gather the pool, merge redundantly — paper-faithful) or
+    ``"distributed"`` (the pool stays sharded; only the k global centers
+    cross devices per Lloyd round).
     """
     backend: BackendSpec = "auto"
     mode: str = "auto"
     mesh_axis: str = "data"
     donate: bool = False
+    merge_path: str = "replicated"
 
     def __post_init__(self):
         if self.mode not in _MODES:
             raise ValueError(
                 f"unknown execution mode {self.mode!r}; known: {_MODES}")
+        if self.merge_path not in _MERGE_PATHS:
+            raise ValueError(
+                f"unknown merge path {self.merge_path!r}; known: "
+                f"{_MERGE_PATHS}")
 
 
 @dataclasses.dataclass(frozen=True)
 class ClusterSpec:
-    """The full declarative job: partition -> local -> merge + execution.
+    """The full declarative job: partition -> local [-> levels...] -> merge
+    + execution.
 
     ``scale=True`` applies the paper's min-max feature scaling around the
-    whole pipeline (centers are mapped back to input space).
+    whole pipeline (centers are mapped back to input space).  ``levels``
+    holds the *extra* reduce-tree stages (:class:`LevelSpec`) run on the
+    weighted center pool between the base local stage and the merge; the
+    default ``()`` is today's two-level pipeline, bit-for-bit ("levels=1"
+    in reduce-tree counting — :meth:`n_levels` is ``1 + len(levels)``).
     """
     merge: MergeSpec
     partition: PartitionSpec = PartitionSpec()
     local: LocalSpec = LocalSpec()
     execution: ExecutionSpec = ExecutionSpec()
     scale: bool = True
+    levels: tuple = ()          # tuple[LevelSpec, ...] — extra reduce levels
+
+    def __post_init__(self):
+        # keep the spec hashable (jit-static) when levels arrives as a list
+        object.__setattr__(self, "levels", tuple(self.levels))
 
     # -- flat-kwargs bridge (the legacy vocabulary) -----------------------
     @classmethod
@@ -119,10 +160,18 @@ class ClusterSpec:
              capacity_factor: float = 2.0, scale: bool = True,
              backend: BackendSpec = None, restarts: int = 4,
              mode: str = "auto", mesh_axis: str = "data",
-             donate: bool = False) -> "ClusterSpec":
+             donate: bool = False,
+             levels: "int | tuple" = ()) -> "ClusterSpec":
         """Build a spec from the historical flat kwarg vocabulary (what
         ``sampled_kmeans`` took before specs existed).  ``init`` seeds both
-        stages unless ``merge_init`` overrides the merge stage."""
+        stages unless ``merge_init`` overrides the merge stage.  ``levels``
+        takes a tuple of :class:`LevelSpec` or an int total level count
+        (``levels=n`` appends ``n - 1`` default reduce levels)."""
+        if isinstance(levels, int):
+            if levels < 1:
+                raise ValueError(f"levels={levels}: the reduce tree has at "
+                                 f"least the base local stage (levels >= 1)")
+            levels = tuple(LevelSpec() for _ in range(levels - 1))
         return cls(
             partition=PartitionSpec(scheme=scheme, n_sub=n_sub,
                                     capacity_factor=capacity_factor),
@@ -134,6 +183,7 @@ class ClusterSpec:
                                     else "auto", mode=mode,
                                     mesh_axis=mesh_axis, donate=donate),
             scale=scale,
+            levels=levels,
         )
 
     # -- serialization ----------------------------------------------------
@@ -144,6 +194,7 @@ class ClusterSpec:
         be = self.execution.backend
         if isinstance(be, LloydBackend):
             d["execution"]["backend"] = be.name
+        d["levels"] = [dict(lv) for lv in d["levels"]]  # JSON-friendly list
         return d
 
     @classmethod
@@ -167,16 +218,59 @@ class ClusterSpec:
                     f"ClusterSpec.from_dict: unknown {field} keys "
                     f"{sorted(unknown)}; known: {sorted(known)}")
             kwargs[field] = klass(**sub)
+        known_lv = {f.name for f in dataclasses.fields(LevelSpec)}
+        levels = []
+        for i, lv in enumerate(d.pop("levels", ())):
+            lv = dict(lv)
+            unknown = set(lv) - known_lv
+            if unknown:
+                raise ValueError(
+                    f"ClusterSpec.from_dict: unknown levels[{i}] keys "
+                    f"{sorted(unknown)}; known: {sorted(known_lv)}")
+            levels.append(LevelSpec(**lv))
         scale = d.pop("scale", True)
         if d:
             raise ValueError(
                 f"ClusterSpec.from_dict: unknown top-level keys {sorted(d)}")
-        return cls(scale=scale, **kwargs)
+        return cls(scale=scale, levels=tuple(levels), **kwargs)
 
     # -- convenience ------------------------------------------------------
     @property
     def k(self) -> int:
         return self.merge.k
+
+    @property
+    def n_levels(self) -> int:
+        """Reduce-tree depth: the base local stage plus the extra levels."""
+        return 1 + len(self.levels)
+
+    def level_schedule(self) -> tuple:
+        """The full reduce schedule, base stage first: the partition/local
+        sections expressed as a :class:`LevelSpec` followed by the extra
+        ``levels``.  This is what the planner resolves once and every
+        executor (single, shard_map, stream) walks."""
+        base = LevelSpec(n_sub=self.partition.n_sub,
+                         compression=self.local.compression,
+                         iters=self.local.iters, init=self.local.init,
+                         scheme=self.partition.scheme,
+                         capacity_factor=self.partition.capacity_factor)
+        return (base,) + self.levels
+
+    def pool_schedule(self, n_points: int) -> tuple:
+        """Representative-pool size after each level of the reduce tree for
+        an ``n_points`` input (single-device accounting; under shard_map
+        ``n_points`` is the per-device shard and each level shrinks every
+        device's pool independently).  ``pool_schedule(n)[-1]`` is what the
+        merge stage sees."""
+        sizes, n = [], n_points
+        for lv in self.level_schedule():
+            cap = -(-n // lv.n_sub)  # ceil — Algorithm 1's slot count
+            if lv.scheme == "unequal":
+                # Algorithm 2 bounds partitions at ceil(M/P)*capacity_factor
+                cap = min(int(cap * lv.capacity_factor), n)
+            n = lv.n_sub * max(1, cap // lv.compression)
+            sizes.append(n)
+        return tuple(sizes)
 
     def replace(self, **kwargs) -> "ClusterSpec":
         """``dataclasses.replace`` that also reaches one level down:

@@ -124,10 +124,20 @@ def unequal_partition(
     return Partition(idx, mask, n_dropped)
 
 
-def gather_partitions(x: Array, part: Partition) -> tuple[Array, Array]:
-    """Materialise (P, capacity, d) point blocks + (P, capacity) weights."""
+def gather_partitions(x: Array, part: Partition,
+                      weights: Array | None = None) -> tuple[Array, Array]:
+    """Materialise (P, capacity, d) point blocks + (P, capacity) weights.
+
+    With ``weights`` (per-point mass, e.g. the member counts of a weighted
+    center pool in the hierarchical reduce tree) each slot carries
+    ``mask * weights[index]`` instead of the 0/1 mask — dead pool entries
+    (weight 0) land in some partition but contribute nothing to its
+    k-means, so mass is conserved level to level.
+    """
     pts = x[part.indices]
     w = part.mask.astype(x.dtype)
+    if weights is not None:
+        w = w * weights.astype(x.dtype)[part.indices]
     return pts, w
 
 

@@ -29,6 +29,7 @@ the existing ``data`` axis (see :mod:`repro.core.distributed`).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import NamedTuple, Optional
 
 import jax
@@ -37,7 +38,7 @@ import jax.numpy as jnp
 from repro.core.backend import BackendSpec, LloydBackend, get_backend
 from repro.core.kmeans import kmeans, pairwise_sqdist
 from repro.core.metrics import sse as sse_fn
-from repro.core.pipeline import local_stage
+from repro.core.pipeline import local_stage, reduce_pool
 from repro.core.spec import ClusterSpec
 from repro.core.subcluster import (feature_scale, gather_partitions,
                                    get_partitioner, unscale)
@@ -70,6 +71,9 @@ class StreamConfig:
     reseed_threshold: float = 1e-6 # coreset support below this = dead center
     init_mode: str = "kmeans++"    # local-stage init
     backend: str = "auto"          # LloydBackend name (repro.core.backend)
+    levels: tuple = ()             # tuple[LevelSpec, ...]: extra reduce
+    #                                levels compressing the coreset pool
+    #                                before each warm-started merge
 
     @classmethod
     def from_spec(cls, spec: ClusterSpec, **overrides) -> "StreamConfig":
@@ -88,6 +92,7 @@ class StreamConfig:
             merge_iters=spec.merge.iters,
             init_mode=spec.local.init,
             backend=spec.execution.backend,
+            levels=spec.levels,
         )
         base.update(overrides)
         return cls(**base)
@@ -160,12 +165,24 @@ def fold_and_merge(state: StreamState, new_pts: Array, new_w: Array,
                    key: Array, backend: BackendSpec = None
                    ) -> StreamState:
     """Global half of an update: coreset fold + reseed + warm-started merge.
-    Runs replicated under shard_map (inputs already gathered)."""
+    Runs replicated under shard_map (inputs already gathered).
+
+    With ``cfg.levels`` the merge input is first compressed through the
+    hierarchical reduce tree (:func:`repro.core.pipeline.reduce_pool`) —
+    the persistent coreset buffer itself keeps its full resolution; only
+    the per-update merge sees the shrunken pool.
+    """
     coreset, coreset_w = fold_coreset(state.coreset, state.coreset_w,
                                       new_pts, new_w, cfg.decay)
     warm = reseed_dead_centers(state.centers, coreset, coreset_w,
                                cfg.reseed_threshold)
-    merged = kmeans(coreset, cfg.k, weights=coreset_w,
+    pool, pool_w = coreset, coreset_w
+    for i, lvl in enumerate(cfg.levels):
+        pool, pool_w, _ = reduce_pool(pool, pool_w, lvl,
+                                      jax.random.fold_in(key, 1 + i),
+                                      backend=backend if backend is not None
+                                      else cfg.backend)
+    merged = kmeans(pool, cfg.k, weights=pool_w,
                     iters=cfg.merge_iters, key=key, init=warm,
                     backend=backend if backend is not None else cfg.backend)
     return StreamState(
@@ -198,6 +215,15 @@ class StreamingClusterer:
         if isinstance(cfg, ClusterSpec):
             cfg = StreamConfig.from_spec(cfg)
         self.cfg = cfg
+        if any(lvl.scheme == "unequal" for lvl in cfg.levels):
+            # the stream state has no n_dropped channel: an unequal-scheme
+            # level's capacity clamp would shave merge-input mass silently
+            # on every update
+            warnings.warn(
+                "StreamingClusterer: unequal-scheme reduce levels can clamp "
+                "overflow pool entries out of each merge input unreported — "
+                "prefer equal-scheme levels (or raise capacity_factor)",
+                stacklevel=2)
         # resolve once (env/auto) so update/query/shard_map share one backend
         self.backend: LloydBackend = get_backend(
             backend if backend is not None else cfg.backend)

@@ -18,11 +18,14 @@ forever while tracking the full history.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 import jax.numpy as jnp
 
 from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans, update_centers
+from repro.core.pipeline import reduce_pool
 from repro.core.spec import ClusterSpec
 
 Array = jax.Array
@@ -47,11 +50,24 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
     only move them onto window keys (a zero-weight point at its old
     position attracts nothing it keeps).
     """
+    levels = ()
     if spec is not None:
         # the refresh IS the spec's merge stage (warm-started, centroids as
-        # the coreset) — iters/backend come from the merge/execution sections
+        # the coreset) — iters/backend come from the merge/execution
+        # sections, and spec.levels pre-compresses the [centroids ‖ window]
+        # pool through the hierarchical reduce tree before the merge
         iters = spec.merge.iters
         backend = backend if backend is not None else spec.execution.backend
+        levels = spec.levels
+        if any(lvl.scheme == "unequal" for lvl in levels):
+            # counts are re-aggregated from the ORIGINAL points, so mass
+            # stays conserved here — but clamped pool entries still skew
+            # which regions the merged centroids cover
+            warnings.warn(
+                "refresh_clustered_cache: unequal-scheme reduce levels can "
+                "clamp overflow pool entries out of the merge input — "
+                "prefer equal-scheme levels (or raise capacity_factor)",
+                stacklevel=2)
     if key is None:
         key = jax.random.PRNGKey(0)
     be = get_backend(backend)
@@ -72,9 +88,19 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
         pts = jnp.concatenate([kc1, wk1], axis=0)
         vals = jnp.concatenate([vc1, wv1], axis=0)
         w = jnp.concatenate([cnt1, val1], axis=0)
-        res = kmeans(pts, n, weights=w, iters=iters, key=kk, init=kc1,
+        pool, pool_w = pts, w
+        for i, lvl in enumerate(levels):
+            pool, pool_w, _ = reduce_pool(pool, pool_w, lvl,
+                                          jax.random.fold_in(kk, 1 + i), be)
+        res = kmeans(pool, n, weights=pool_w, iters=iters, key=kk, init=kc1,
                      backend=be)
-        new_vc, new_cnt = update_centers(vals, w, res.assignment, n, vc1)
+        if levels:
+            # the merge ran on the reduced pool; re-assign the ORIGINAL
+            # points so values/counts aggregate the true mass
+            idx, _ = be.assign_points(pts, res.centers)
+        else:
+            idx = res.assignment
+        new_vc, new_cnt = update_centers(vals, w, idx, n, vc1)
         return res.centers, new_vc, new_cnt
 
     nkc, nvc, ncnt = jax.vmap(one)(kc_f, vc_f, cnt_f, wk_f, wv_f, val_f, keys)

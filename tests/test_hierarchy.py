@@ -1,0 +1,310 @@
+"""Hierarchical multi-level reduce tree + distributed-path parity fixes.
+
+Covers the ISSUE-4 acceptance criteria: ``levels=1`` (no extra levels) is
+bit-for-bit today's pipeline; ``levels>=2`` stays within SSE tolerance of
+the flat merge in all three modes; the spec section round-trips; and the
+distributed path's regressions (scaled-space results, hard-coded
+PRNGKey(17), duplicate rows from small candidate pools) stay fixed.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import compat
+from repro.api import SampledKMeans, plan
+from repro.core import (ClusterSpec, ExecutionSpec, LevelSpec, LocalSpec,
+                        MergeSpec, PartitionSpec, equal_partition,
+                        feature_scale, fit_from_spec, gather_partitions,
+                        kmeans, local_stage, make_distributed_sampled_kmeans,
+                        reduce_pool, relative_error, standard_kmeans,
+                        unscale)
+from repro.data.synthetic import blobs, drifting_blobs
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    pts, labels, _ = blobs(3000, n_clusters=6, dim=2, seed=3)
+    return jnp.asarray(pts), labels
+
+
+FLAT = ClusterSpec(partition=PartitionSpec(scheme="equal", n_sub=8),
+                   local=LocalSpec(compression=5, iters=8),
+                   merge=MergeSpec(k=6, iters=15))
+HIER = FLAT.replace(levels=(LevelSpec(n_sub=4, compression=3, iters=6),))
+
+
+def _mesh1():
+    return compat.make_mesh((1,), ("data",))
+
+
+def _shard(x, mesh):
+    return jax.device_put(x, NamedSharding(mesh, P("data")))
+
+
+# ---------------------------------------------------------------------------
+# Spec: serialization, schedule accounting, planner validation
+# ---------------------------------------------------------------------------
+
+def test_levels_spec_roundtrip():
+    spec = HIER.replace(levels=(
+        LevelSpec(n_sub=4, compression=3, iters=6),
+        LevelSpec(n_sub=2, compression=2, iters=4, init="random",
+                  scheme="unequal", capacity_factor=1.5),
+    ))
+    restored = ClusterSpec.from_dict(json.loads(json.dumps(spec.to_dict())))
+    assert restored == spec
+    assert restored.n_levels == 3
+    with pytest.raises(ValueError, match="unknown levels"):
+        d = spec.to_dict()
+        d["levels"][0]["iterz"] = 9
+        ClusterSpec.from_dict(d)
+
+
+def test_levels_default_is_flat():
+    assert FLAT.levels == () and FLAT.n_levels == 1
+    # the base stage expressed as a LevelSpec heads the schedule
+    base = FLAT.level_schedule()[0]
+    assert (base.n_sub, base.compression, base.iters) == (8, 5, 8)
+    assert ClusterSpec.make(6).levels == ()
+    assert ClusterSpec.make(6, levels=3).n_levels == 3
+    with pytest.raises(ValueError, match="levels"):
+        ClusterSpec.make(6, levels=0)
+
+
+def test_pool_schedule_matches_executor(dataset):
+    x, _ = dataset
+    sizes = HIER.pool_schedule(x.shape[0])
+    res = fit_from_spec(x, HIER, jax.random.PRNGKey(0))
+    assert res.local_centers.shape[0] == sizes[-1]
+    # flat pipeline pool too
+    flat = fit_from_spec(x, FLAT, jax.random.PRNGKey(0))
+    assert flat.local_centers.shape[0] == FLAT.pool_schedule(x.shape[0])[-1]
+
+
+def test_plan_resolves_and_validates_levels(dataset):
+    x, _ = dataset
+    pl = plan(HIER, tuple(x.shape))
+    assert pl.n_levels == 2 and pl.schedule == HIER.level_schedule()
+    with pytest.raises(ValueError, match="unknown init scheme"):
+        plan(HIER.replace(levels=(LevelSpec(init="bogus"),)))
+    with pytest.raises(ValueError, match="unknown partition scheme"):
+        plan(HIER.replace(levels=(LevelSpec(scheme="bogus"),)))
+    # a schedule that leaves fewer representatives than k is rejected up
+    # front (single mode, where the accounting is exact)
+    starved = FLAT.replace(levels=(LevelSpec(n_sub=1, compression=1000),))
+    with pytest.raises(ValueError, match="reduce tree leaves only"):
+        plan(starved, tuple(x.shape))
+
+
+def test_merge_path_validated():
+    with pytest.raises(ValueError, match="unknown merge path"):
+        ExecutionSpec(merge_path="serial")
+
+
+# ---------------------------------------------------------------------------
+# levels=1 bit-for-bit (single mode golden; stream/shard_map via config)
+# ---------------------------------------------------------------------------
+
+def test_levels1_single_bit_for_bit_golden(dataset):
+    """The refactored executor with no extra levels must retrace today's
+    two-level pipeline exactly — pinned against an inline re-implementation
+    using the same key split."""
+    x, _ = dataset
+    key = jax.random.PRNGKey(11)
+    res = fit_from_spec(x, FLAT, key)
+
+    key_local, key_global = jax.random.split(key)
+    xs, params = feature_scale(x)
+    parts, part_w = gather_partitions(xs, equal_partition(xs, 8))
+    k_local = max(1, parts.shape[1] // 5)
+    local = local_stage(parts, part_w, k_local, iters=8, key=key_local)
+    lc = local.centers.reshape(8 * k_local, 2)
+    lw = local.counts.reshape(8 * k_local)
+    merged = kmeans(lc, 6, weights=(lw > 0).astype(x.dtype), iters=15,
+                    key=key_global, restarts=4)
+    centers = unscale(merged.centers, params)
+    np.testing.assert_array_equal(np.asarray(res.centers),
+                                  np.asarray(centers))
+
+
+def test_levels1_stream_config_unchanged():
+    from repro.stream import StreamConfig
+    cfg = StreamConfig.from_spec(FLAT)
+    assert cfg.levels == ()
+    assert StreamConfig.from_spec(HIER).levels == HIER.levels
+
+
+# ---------------------------------------------------------------------------
+# levels>=2 quality, all three modes
+# ---------------------------------------------------------------------------
+
+def test_hierarchy_sse_close_to_flat_single(dataset):
+    x, _ = dataset
+    key = jax.random.PRNGKey(0)
+    flat = fit_from_spec(x, FLAT, key)
+    hier = fit_from_spec(x, HIER, key)
+    full = standard_kmeans(x, 6, iters=30)
+    assert float(hier.sse) <= float(flat.sse) * 1.10
+    assert relative_error(float(hier.sse), float(full.sse)) < 0.15
+    # mass is conserved through every level
+    np.testing.assert_allclose(float(hier.local_weights.sum()), x.shape[0],
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("merge_path", ["replicated", "distributed"])
+def test_hierarchy_shard_map(dataset, merge_path):
+    x, _ = dataset
+    mesh = _mesh1()
+    xd = _shard(x, mesh)
+    spec = HIER.replace(merge_path=merge_path)
+    res = make_distributed_sampled_kmeans(mesh, spec=spec)(
+        xd, jax.random.PRNGKey(0))
+    ref = float(standard_kmeans(x, 6, iters=30).sse)
+    assert (float(res.sse) - ref) / ref < 0.15, merge_path
+    # the gathered pool is the LAST level's (shrunken) pool
+    assert res.local_centers.shape[0] == HIER.pool_schedule(x.shape[0])[-1]
+
+
+def test_hierarchy_stream_drifting_blobs():
+    chunks, _, _ = drifting_blobs(6, 512, n_clusters=8, dim=2, seed=0)
+    from repro.stream import StreamConfig, StreamingClusterer
+
+    def run(spec):
+        sc = StreamingClusterer(StreamConfig.from_spec(spec,
+                                                       buffer_size=256))
+        state = sc.init(dim=2, key=jax.random.PRNGKey(0))
+        for ch in chunks:
+            state = sc.update(state, jnp.asarray(ch))
+        _, total = sc.query(state, jnp.asarray(chunks[-1]))
+        return float(total)
+
+    spec = ClusterSpec(merge=MergeSpec(k=8, iters=8),
+                       partition=PartitionSpec(n_sub=8),
+                       local=LocalSpec(compression=5, iters=6))
+    flat_sse = run(spec)
+    hier_sse = run(spec.replace(
+        levels=(LevelSpec(n_sub=4, compression=2, iters=4),)))
+    assert hier_sse <= flat_sse * 1.25, (hier_sse, flat_sse)
+
+
+def test_reduce_pool_conserves_mass_and_shrinks(dataset):
+    x, _ = dataset
+    xs, _ = feature_scale(x)
+    pool = xs[:600]
+    w = jnp.concatenate([jnp.ones((500,), x.dtype),
+                         jnp.zeros((100,), x.dtype)])  # dead tail
+    lvl = LevelSpec(n_sub=4, compression=3, iters=5)
+    out, out_w, w_dropped = reduce_pool(pool, w, lvl, jax.random.PRNGKey(0))
+    assert out.shape[0] < pool.shape[0]
+    np.testing.assert_allclose(float(out_w.sum()), 500.0, rtol=1e-5)
+    assert float(w_dropped) == 0.0          # equal scheme: every entry kept
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_reduce_pool_unequal_reports_dropped_mass(dataset):
+    """The unequal scheme's capacity bound can clamp overflow ENTRIES of
+    the pool; each entry carries real mass, so the loss must be reported
+    (and fit_from_spec folds it into n_dropped), never silent."""
+    x, _ = dataset
+    xs, _ = feature_scale(x)
+    pool = xs[:600]
+    w = jnp.full((600,), 5.0, x.dtype)
+    lvl = LevelSpec(n_sub=4, compression=3, iters=4, scheme="unequal",
+                    capacity_factor=0.5)   # guarantees overflow
+    with pytest.warns(UserWarning, match="WILL be dropped"):
+        out, out_w, w_dropped = reduce_pool(pool, w, lvl,
+                                            jax.random.PRNGKey(0))
+    # kept mass + dropped mass = total mass, exactly
+    np.testing.assert_allclose(float(out_w.sum()) + float(w_dropped),
+                               3000.0, rtol=1e-5)
+    assert float(w_dropped) > 0.0
+    # end to end: the loss surfaces in the result's n_dropped channel
+    spec = FLAT.replace(levels=(lvl,))
+    with pytest.warns(UserWarning, match="WILL be dropped"):
+        res = fit_from_spec(x, spec, jax.random.PRNGKey(0))
+    assert int(res.n_dropped) > 0
+
+
+def test_unequal_levels_warn_where_unreported(dataset):
+    """Executors without an n_dropped channel (shard_map, stream) must
+    warn at build time that unequal-scheme levels can clamp mass."""
+    from repro.stream import StreamConfig, StreamingClusterer
+    x, _ = dataset
+    lvl = LevelSpec(n_sub=2, compression=2, scheme="unequal")
+    with pytest.warns(UserWarning, match="no n_dropped channel"):
+        make_distributed_sampled_kmeans(_mesh1(),
+                                        spec=FLAT.replace(levels=(lvl,)))
+    with pytest.warns(UserWarning, match="unreported"):
+        StreamingClusterer(StreamConfig.from_spec(
+            FLAT.replace(levels=(lvl,)), buffer_size=128))
+
+
+# ---------------------------------------------------------------------------
+# Distributed-path regressions (the PR's bugfix satellites)
+# ---------------------------------------------------------------------------
+
+def test_distributed_matches_fit_from_spec_input_space(dataset):
+    """1-device-mesh parity: the shard_map path must land in the same
+    input-space solution neighbourhood as fit_from_spec — the old code
+    returned centers/SSE in the scaled [0,1]^d space."""
+    x, _ = dataset
+    mesh = _mesh1()
+    res = make_distributed_sampled_kmeans(mesh, spec=FLAT)(
+        _shard(x, mesh), jax.random.PRNGKey(0))
+    ref = fit_from_spec(x, FLAT, jax.random.PRNGKey(0))
+    assert abs(float(res.sse) - float(ref.sse)) / float(ref.sse) < 0.05
+    # centers live in the data's range, not in [0,1]^d: blobs span ~[0,10]
+    assert float(jnp.abs(res.centers).max()) > 1.5
+    lo, hi = x.min(axis=0), x.max(axis=0)
+    assert bool(jnp.all(res.centers >= lo - 1e-3))
+    assert bool(jnp.all(res.centers <= hi + 1e-3))
+    # the gathered representatives are unscaled too
+    assert float(jnp.abs(res.local_centers).max()) > 1.5
+
+
+@pytest.mark.parametrize("merge_path", ["replicated", "distributed"])
+def test_distributed_merge_keys_threaded(dataset, merge_path):
+    """The caller's key must reach the merge stage (was PRNGKey(17)):
+    one key is reproducible, two keys differ."""
+    x, _ = dataset
+    mesh = _mesh1()
+    xd = _shard(x, mesh)
+    fn = make_distributed_sampled_kmeans(mesh, 6, n_sub_per_device=6,
+                                         compression=5, merge=merge_path)
+    a = fn(xd, jax.random.PRNGKey(0))
+    b = fn(xd, jax.random.PRNGKey(0))
+    c = fn(xd, jax.random.PRNGKey(123))
+    np.testing.assert_array_equal(np.asarray(a.centers),
+                                  np.asarray(b.centers))
+    assert not np.array_equal(np.asarray(a.centers), np.asarray(c.centers))
+
+
+def test_distributed_merge_small_pool_no_duplicates(dataset):
+    """k > gathered candidate pool: the k-center init used to emit
+    duplicate rows (permanently dead clusters); the jitter fallback must
+    spread them instead."""
+    x, _ = dataset
+    mesh = _mesh1()
+    # compression=400 -> k_local=3, pool=6 candidates for k=16
+    fn = make_distributed_sampled_kmeans(mesh, 16, n_sub_per_device=2,
+                                         compression=400,
+                                         merge="distributed")
+    res = fn(_shard(x, mesh), jax.random.PRNGKey(0))
+    c = np.asarray(res.centers)
+    assert np.isfinite(c).all()
+    assert len(np.unique(c.round(6), axis=0)) == 16, "duplicate centers"
+
+
+def test_facade_hierarchy_shard_map(dataset):
+    """SampledKMeans + mesh + levels: the facade routes the schedule into
+    the distributed executor (merge_path from the spec)."""
+    x, _ = dataset
+    mesh = _mesh1()
+    est = SampledKMeans(HIER.replace(merge_path="distributed"), mesh=mesh)
+    est.fit(_shard(x, mesh), key=jax.random.PRNGKey(0))
+    ref = float(standard_kmeans(x, 6, iters=30).sse)
+    assert (float(est.sse_) - ref) / ref < 0.15

@@ -23,12 +23,22 @@ import time
 ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts"
 
 
+def _peak_rss_mb() -> float:
+    """Process high-water-mark resident set, MB (ru_maxrss is KB on Linux,
+    bytes on macOS)."""
+    import resource
+    import sys as _sys
+    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    return peak / 1024.0 if _sys.platform != "darwin" else peak / 2 ** 20
+
+
 def run_spec_file(path: str, csv) -> None:
     import jax
     import jax.numpy as jnp
 
     from repro.api import SampledKMeans
     from repro.core.spec import ClusterSpec
+    from repro.data.source import SyntheticSource
     from repro.data.synthetic import blobs
 
     payload = json.loads(open(path).read())
@@ -37,12 +47,23 @@ def run_spec_file(path: str, csv) -> None:
     n, dim = int(w.get("n", 100_000)), int(w.get("dim", 2))
     seed, repeats = int(w.get("seed", 0)), int(w.get("repeats", 3))
 
-    pts, _, _ = blobs(n, n_clusters=spec.merge.k, dim=dim, seed=seed)
-    x = jnp.asarray(pts)
+    chunked = spec.execution.mode == "chunked"
+    if chunked:
+        # out-of-core workloads never materialize: the source generates
+        # each chunk on demand, so the peak-RSS field below actually
+        # demonstrates the memory ceiling
+        x = SyntheticSource(n, dim=dim, n_clusters=spec.merge.k, seed=seed)
+        mode = "chunked"
+    else:
+        pts, _, _ = blobs(n, n_clusters=spec.merge.k, dim=dim, seed=seed)
+        x = jnp.asarray(pts)
+        mode = None
     est = SampledKMeans(spec)
     key = jax.random.PRNGKey(seed)
     est.fit(x, key=key)                      # compile + warm
     jax.block_until_ready(est.sse_)
+    if mode is None:
+        mode = est.plan(tuple(x.shape)).mode
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()
@@ -50,20 +71,32 @@ def run_spec_file(path: str, csv) -> None:
         jax.block_until_ready(est.sse_)
         times.append(time.perf_counter() - t0)
     name = payload.get("name", pathlib.Path(path).stem)
+    points_per_sec = n / min(times)
     csv(f"spec/{name}", min(times) * 1e6,
         f"sse={float(est.sse_):.2f};n={n};k={spec.merge.k};"
-        f"levels={spec.n_levels};mode={est.plan(x.shape).mode}")
+        f"levels={spec.n_levels};mode={mode};"
+        f"pps={points_per_sec:.0f};rss_mb={_peak_rss_mb():.0f}")
     # drop a JSON artifact next to the perf records so CI's benchmark
-    # upload captures serialized-spec runs too
+    # upload captures serialized-spec runs too (chunked runs get their own
+    # BENCH_chunked_* prefix so the out-of-core perf trajectory is greppable)
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
-    (ARTIFACTS / f"BENCH_spec_{name}.json").write_text(json.dumps({
+    record = {
         "bench": "spec_file",
         "spec_file": str(path),
+        "mode": mode,
         "workload": {"n": n, "dim": dim, "seed": seed, "repeats": repeats},
-        "pool_schedule": list(spec.pool_schedule(n)),
+        "pool_schedule": list(spec.chunked_pool_schedule(n) if chunked
+                              else spec.pool_schedule(n)),
         "us_best": min(times) * 1e6,
+        "points_per_sec": points_per_sec,
+        "peak_rss_mb": _peak_rss_mb(),
         "sse": float(est.sse_),
-    }, indent=1))
+    }
+    if est.chunk_stats_ is not None:
+        record["chunk_stats"] = est.chunk_stats_._asdict()
+    prefix = "" if name.startswith("chunked") else "spec_"
+    (ARTIFACTS / f"BENCH_{prefix}{name}.json").write_text(
+        json.dumps(record, indent=1))
 
 
 def _csv(name, us, derived):

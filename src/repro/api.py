@@ -41,11 +41,18 @@ import jax.numpy as jnp
 
 from repro.core.backend import LloydBackend, get_backend
 from repro.core.kmeans import get_init, pairwise_sqdist
-from repro.core.pipeline import SampledClusteringResult, fit_from_spec
+from repro.core.metrics import map_row_blocks, min_sqdist
+from repro.core.pipeline import (ChunkStats, SampledClusteringResult,
+                                 fit_chunked, fit_from_spec, sse_pass)
 from repro.core.spec import ClusterSpec
 from repro.core.subcluster import get_partitioner
+from repro.data.source import ArraySource, DataSource, as_source
 
 Array = jax.Array
+
+# default row-block for the predict-side surfaces (transform/score): the
+# working set stays O(block · k) however large the query set is
+PREDICT_BLOCK = 16384
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,16 +80,20 @@ class ExecutionPlan:
 
 
 def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
-         mesh: Optional[jax.sharding.Mesh] = None) -> ExecutionPlan:
+         mesh: Optional[jax.sharding.Mesh] = None,
+         source: Optional[DataSource] = None) -> ExecutionPlan:
     """Resolve a declarative spec into an executable plan.
 
     Validates every registry name (partitioner, init schemes, backend) up
     front — a typo fails here with the known-names list, not deep inside a
     jit trace — and picks the execution mode: an explicit
     ``spec.execution.mode`` wins; ``"auto"`` selects ``shard_map`` when a
-    mesh is supplied and ``single`` otherwise.  ``data_shape`` (the (M, d)
-    of the points, when known) is recorded for downstream sizing and lets
-    the planner reject shard_map runs whose rows don't divide over the mesh.
+    mesh is supplied, ``chunked`` when ``source`` is a non-resident
+    :class:`~repro.data.source.DataSource` (anything but an ArraySource),
+    and ``single`` otherwise.  ``data_shape`` (the (M, d) of the points,
+    when known) is recorded for downstream sizing and lets the planner
+    reject shard_map runs whose rows don't divide over the mesh and
+    chunked runs whose chunk schedule starves the merge.
     """
     # registry validation: fail fast, with the known-names list (the extra
     # reduce levels resolve against the same partitioner/init registries)
@@ -97,7 +108,21 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
 
     mode = spec.execution.mode
     if mode == "auto":
-        mode = "shard_map" if mesh is not None else "single"
+        if mesh is not None:
+            mode = "shard_map"
+        elif source is not None and not isinstance(source, ArraySource):
+            mode = "chunked"
+        else:
+            mode = "single"
+    if (mode == "chunked" and data_shape is not None and data_shape[0]
+            and spec.chunked_pool_schedule(int(data_shape[0]))[-1]
+            < spec.merge.k):
+        raise ValueError(
+            f"plan: the chunked schedule leaves only "
+            f"{spec.chunked_pool_schedule(int(data_shape[0]))[-1]} "
+            f"representatives for a k={spec.merge.k} merge — use larger "
+            f"chunks, drop a level, or lower its compression (chunked pool "
+            f"schedule: {spec.chunked_pool_schedule(int(data_shape[0]))})")
     if (mode == "single" and data_shape is not None and len(data_shape) >= 1
             and spec.pool_schedule(int(data_shape[0]))[-1] < spec.merge.k):
         # the equal-scheme pool accounting is exact for single mode; the
@@ -127,13 +152,35 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
                          data_shape=data_shape, schedule=schedule)
 
 
-def execute(pl: ExecutionPlan, x: Array,
-            key: Optional[Array] = None) -> SampledClusteringResult:
-    """Run a plan on ``x``.  Single and shard_map modes are one-shot fits;
-    stream mode folds ``x`` through the incremental engine as one chunk
-    (use :class:`SampledKMeans.partial_fit` for true chunk-wise feeds)."""
+def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
+            return_stats: bool = False):
+    """Run a plan on ``x`` — a resident array or a
+    :class:`~repro.data.source.DataSource`.  Single and shard_map modes are
+    one-shot fits over a resident array (an ArraySource unwraps; other
+    sources are rejected — they exist precisely because the data does not
+    fit); chunked mode folds the source chunk-by-chunk
+    (:func:`repro.core.pipeline.fit_chunked`); stream mode folds ``x``
+    through the incremental engine — as one chunk for arrays, chunk-wise
+    for sources (use :class:`SampledKMeans.partial_fit` for live feeds).
+
+    Returns a :class:`SampledClusteringResult`; with ``return_stats=True``
+    returns ``(result, ChunkStats | None)`` — the out-of-core accounting
+    for chunked mode, ``None`` for the resident modes."""
     if key is None:
         key = jax.random.PRNGKey(0)
+    if pl.mode == "chunked":
+        res, stats = fit_chunked(as_source(x), pl.spec, key,
+                                 backend=pl.backend)
+        return (res, stats) if return_stats else res
+    if return_stats:
+        return execute(pl, x, key), None
+    if isinstance(x, DataSource) and pl.mode != "stream":
+        if not isinstance(x, ArraySource):
+            raise ValueError(
+                f"execute: mode={pl.mode!r} needs a resident array, but the "
+                f"input is a {type(x).__name__} — use mode='chunked' (or "
+                f"'auto') for out-of-core sources")
+        x = x.array
     if pl.mode == "single":
         fit = fit_from_spec
         if pl.spec.execution.donate:
@@ -154,9 +201,22 @@ def execute(pl: ExecutionPlan, x: Array,
         from repro.stream.engine import StreamConfig, StreamingClusterer
         sc = StreamingClusterer(StreamConfig.from_spec(pl.spec),
                                 backend=pl.backend)
-        state = sc.init(dim=x.shape[-1], key=key, dtype=x.dtype)
-        state = sc.update(state, x)
-        _, total = sc.query(state, x)
+        if isinstance(x, DataSource):
+            state = None
+            for chunk in x.chunks(pl.spec.chunk.chunk_points):
+                chunk = jnp.asarray(chunk)
+                if state is None:
+                    state = sc.init(dim=chunk.shape[-1], key=key,
+                                    dtype=chunk.dtype)
+                state = sc.update(state, chunk)
+            if state is None:
+                raise ValueError("execute: the source yielded no chunks")
+            total = sse_pass(x, state.centers, pl.spec.chunk.chunk_points,
+                             prefetch=pl.spec.chunk.prefetch)
+        else:
+            state = sc.init(dim=x.shape[-1], key=key, dtype=x.dtype)
+            state = sc.update(state, x)
+            _, total = sc.query(state, x)
         return SampledClusteringResult(
             centers=state.centers, sse=total, local_centers=state.coreset,
             local_weights=state.coreset_w, n_dropped=jnp.asarray(0, jnp.int32))
@@ -192,23 +252,47 @@ class SampledKMeans:
         self.result_: Optional[SampledClusteringResult] = None
         self.centers_: Optional[Array] = None
         self.sse_: Optional[Array] = None
+        self.chunk_stats_: Optional[ChunkStats] = None
 
     # -- planning ---------------------------------------------------------
-    def plan(self, data_shape: Optional[tuple] = None) -> ExecutionPlan:
-        return plan(self.spec, data_shape, mesh=self.mesh)
+    def plan(self, data_shape: Optional[tuple] = None, *,
+             source: Optional[DataSource] = None) -> ExecutionPlan:
+        return plan(self.spec, data_shape, mesh=self.mesh, source=source)
 
     @property
     def backend(self) -> LloydBackend:
         return self.plan().backend
 
     # -- one-shot fit -----------------------------------------------------
-    def fit(self, x: Array, key: Optional[Array] = None) -> "SampledKMeans":
-        pl = self.plan(tuple(x.shape))
+    def fit(self, x, key: Optional[Array] = None) -> "SampledKMeans":
+        """One-shot fit of ``x``: a resident ``(n, d)`` array (any mode) or
+        a :class:`~repro.data.source.DataSource` (out-of-core; ``auto``
+        resolves non-resident sources to ``chunked``).  Always starts
+        fresh: any live ``partial_fit`` stream state is discarded, so a
+        later ``partial_fit`` begins a new stream."""
+        src = x if isinstance(x, DataSource) else None
+        if src is not None:
+            pl = self.plan(src.shape, source=src)
+        else:
+            pl = self.plan(tuple(x.shape))
+        self._reset_stream()    # fit is a fresh estimator state, every mode
+        self.chunk_stats_ = None
         if pl.mode == "stream":
             # honor the stream-only knobs by going through partial_fit
-            self._reset_stream()
-            return self.partial_fit(x, key=key)
-        self.result_ = execute(pl, x, key)
+            if src is None:
+                return self.partial_fit(x, key=key)
+            for chunk in src.chunks(self.spec.chunk.chunk_points):
+                self.partial_fit(jnp.asarray(chunk), key=key)
+            if self.centers_ is None:
+                raise ValueError("fit: the source yielded no chunks")
+            # unlike partial_fit (which leaves sse_ stale on purpose), a
+            # completed fit always reports quality — one chunked pass
+            self.sse_ = sse_pass(src, self.centers_,
+                                 self.spec.chunk.chunk_points,
+                                 prefetch=self.spec.chunk.prefetch)
+            return self
+        self.result_, self.chunk_stats_ = execute(pl, x, key,
+                                                  return_stats=True)
         self.centers_ = self.result_.centers
         self.sse_ = self.result_.sse
         return self
@@ -250,24 +334,41 @@ class SampledKMeans:
         if self.centers_ is None:
             raise RuntimeError("SampledKMeans: call fit/partial_fit first")
 
-    def predict(self, x: Array) -> Array:
-        """Nearest-center id per point (through the planned backend)."""
+    def predict(self, x) -> Array:
+        """Nearest-center id per point (through the planned backend).
+
+        Accepts a resident array or a :class:`~repro.data.source.DataSource`
+        (assigned chunk-by-chunk, so ``fit_predict`` works out-of-core —
+        only the (n,) label vector materializes)."""
         self._check_fitted()
-        idx, _ = self.plan().backend.assign_points(x, self.centers_)
+        be = self.plan().backend
+        if isinstance(x, DataSource):
+            parts = [be.assign_points(jnp.asarray(c), self.centers_)[0]
+                     for c in x.chunks(self.spec.chunk.chunk_points)]
+            if not parts:
+                raise ValueError("predict: the source yielded no chunks")
+            return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+        idx, _ = be.assign_points(x, self.centers_)
         return idx
 
-    def transform(self, x: Array) -> Array:
-        """(m, k) squared distances to the fitted centers."""
-        self._check_fitted()
-        return pairwise_sqdist(x, self.centers_)
+    def transform(self, x: Array, *, block: int = PREDICT_BLOCK) -> Array:
+        """(m, k) squared distances to the fitted centers.
 
-    def score(self, x: Array) -> Array:
-        """Negative weighted SSE of ``x`` under the fitted centers (larger
-        is better, sklearn convention)."""
+        Computed ``block`` rows at a time so the peak *intermediate*
+        working set is O(block · k) however many points are scored (the
+        (m, k) return value is inherent); identical values to the dense
+        evaluation."""
         self._check_fitted()
-        pl = self.plan()
-        _, mind = pl.backend.assign_points(x, self.centers_)
-        return -jnp.sum(mind)
+        return map_row_blocks(
+            x, lambda b: pairwise_sqdist(b, self.centers_), block)
+
+    def score(self, x: Array, *, block: int = PREDICT_BLOCK) -> Array:
+        """Negative SSE of ``x`` under the fitted centers (larger is
+        better, sklearn convention).  Memory-bounded: the nearest-center
+        reduction runs ``block`` rows at a time — no (m, k) distance
+        matrix materializes."""
+        self._check_fitted()
+        return -jnp.sum(min_sqdist(x, self.centers_, block=block))
 
     def __repr__(self):
         fitted = "fitted" if self.centers_ is not None else "unfitted"

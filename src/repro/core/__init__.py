@@ -11,6 +11,10 @@ Public API:
   get_backend, register_backend   — LloydBackend registry (jnp | pallas |
                                     pallas_fused | auto, REPRO_KMEANS_BACKEND)
   fit_from_spec                   — spec-driven single-device pipeline
+  fit_chunked, ChunkStats         — out-of-core executor over a DataSource
+                                    (repro.data.source; mode="chunked")
+  chunk_fold / merge_pool / scale_pass / sse_pass — the factored stage
+                                    functions every executor composes
   sampled_kmeans, standard_kmeans — thin flat-kwarg adapters over the above
   make_distributed_sampled_kmeans — pod-scale shard_map version
   sse, relative_error, clustering_accuracy — metrics
@@ -24,11 +28,14 @@ from .kmeans import (KMeansResult, assign_jnp, available_inits, get_init,
                      kmeans, kmeans_lloyd_step, kmeans_parallel_init,
                      kmeans_pp_init, landmark_init, pairwise_sqdist,
                      random_init, register_init, update_centers)
-from .metrics import clustering_accuracy, relative_error, sse
-from .pipeline import (SampledClusteringResult, fit_from_spec, local_stage,
-                       reduce_pool, sampled_kmeans, standard_kmeans)
-from .spec import (ClusterSpec, ExecutionSpec, LevelSpec, LocalSpec,
-                   MergeSpec, PartitionSpec)
+from .metrics import (clustering_accuracy, map_row_blocks, min_sqdist,
+                      relative_error, sse)
+from .pipeline import (ChunkStats, SampledClusteringResult, chunk_fold,
+                       fit_chunked, fit_from_spec, local_stage, merge_pool,
+                       reduce_pool, sampled_kmeans, scale_pass, sse_pass,
+                       standard_kmeans)
+from .spec import (ChunkSpec, ClusterSpec, ExecutionSpec, LevelSpec,
+                   LocalSpec, MergeSpec, PartitionSpec)
 from .subcluster import (Partition, available_partitioners, equal_partition,
                          feature_scale, gather_partitions, get_partitioner,
                          register_partitioner, unequal_landmarks,
@@ -38,7 +45,9 @@ from .distributed import (DistributedClusteringResult,
 
 __all__ = [
     "ClusterSpec", "PartitionSpec", "LocalSpec", "MergeSpec",
-    "ExecutionSpec", "LevelSpec",
+    "ExecutionSpec", "LevelSpec", "ChunkSpec",
+    "ChunkStats", "chunk_fold", "merge_pool", "fit_chunked", "scale_pass",
+    "sse_pass", "min_sqdist", "map_row_blocks",
     "KMeansResult", "kmeans", "kmeans_lloyd_step", "assign_jnp",
     "kmeans_pp_init", "kmeans_parallel_init", "landmark_init", "random_init",
     "pairwise_sqdist", "update_centers",

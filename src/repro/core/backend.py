@@ -94,6 +94,16 @@ class LloydBackend:
     def assign_points(self, x: Array, centers: Array) -> tuple[Array, Array]:
         return self.assign(self.prepare(x), centers)
 
+    # structural equality/hash: get_backend() returns a fresh instance per
+    # resolution, but two same-type/same-config backends are the same
+    # computation — jit caches keyed on a backend static arg must hit
+    def __eq__(self, other):
+        return type(self) is type(other) and self.__dict__ == other.__dict__
+
+    def __hash__(self):
+        return hash((type(self), tuple(sorted(self.__dict__.items(),
+                                              key=lambda kv: kv[0]))))
+
     def __repr__(self):
         return f"<LloydBackend {self.name}>"
 

@@ -1,14 +1,32 @@
 """The paper's end-to-end method: partition -> local k-means -> merge k-means.
 
-:func:`fit_from_spec` is the spec-driven single-device implementation (the
-host semantics of the paper); :mod:`repro.core.distributed` wraps the same
-stages in shard_map for pod scale, and :mod:`repro.api` dispatches between
-them.  ``sampled_kmeans`` / ``standard_kmeans`` remain as thin adapters
-that build a :class:`~repro.core.spec.ClusterSpec` internally from the
-historical flat kwargs.
+The method is factored into pure, reusable **stage functions** that every
+executor composes instead of re-implementing:
+
+  ``chunk_fold``   partition one (feature-scaled) block of points and run
+                   the vmap'd local k-means on it — the paper's "device
+                   part" as a unit of work over ONE chunk;
+  ``reduce_pool``  one level of the hierarchical reduce tree over a
+                   weighted center pool;
+  ``merge_pool``   the merge ("host part") k-means over a weighted pool;
+  ``scale_pass``   streaming per-attribute min/max (the feature-scale
+                   parameters without a resident array);
+  ``sse_pass``     chunked exact SSE of a source against fitted centers.
+
+:func:`fit_from_spec` composes them over one resident array (the host
+semantics of the paper); :func:`fit_chunked` composes the *same* stages
+over a :class:`repro.data.source.DataSource` so the dataset only ever
+exists chunk-by-chunk (``mode="chunked"`` — the out-of-core executor);
+:mod:`repro.core.distributed` wraps the stages in shard_map for pod scale;
+:mod:`repro.stream.engine` folds them incrementally; and :mod:`repro.api`
+dispatches between all four.  ``sampled_kmeans`` / ``standard_kmeans``
+remain as thin adapters that build a :class:`~repro.core.spec.ClusterSpec`
+internally from the historical flat kwargs.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import warnings
 from typing import NamedTuple, Optional
 
@@ -18,11 +36,17 @@ import jax.numpy as jnp
 from .backend import BackendSpec, get_backend
 from .kmeans import KMeansResult, kmeans
 from .metrics import sse as sse_fn
-from .spec import ClusterSpec, LevelSpec
+from .spec import ClusterSpec, LevelSpec, MergeSpec
 from .subcluster import (Partition, feature_scale, gather_partitions,
                          get_partitioner, unscale)
 
 Array = jax.Array
+
+# per-chunk PRNG stream: chunk 0 reuses the base local key verbatim (the
+# single-chunk bit-for-bit parity pin with fit_from_spec); later chunks fold
+# in a large offset so they can never collide with the reduce-level streams
+# fold_in(key_local, 1 + level_index)
+_CHUNK_KEY_OFFSET = 1_000_003
 
 
 class SampledClusteringResult(NamedTuple):
@@ -58,6 +82,51 @@ def local_stage(
             p, k_local, weights=w, iters=iters, key=kk, init=init,
             backend=be)
     )(parts, part_w, keys)
+
+
+def chunk_fold(xs: Array, lv: LevelSpec, key: Array, *,
+               backend: BackendSpec = None) -> tuple[Array, Array, Array]:
+    """Partition one (already feature-scaled) block of points and summarise
+    it with the vmap'd local stage: ``(m, d)`` points ->
+    ``(n_sub * k_local, d)`` weighted centers + ``(n_sub * k_local,)``
+    member counts + ``()`` dropped-point count (Algorithm 2 overflow).
+
+    This is the unit of work every executor folds over its data: the batch
+    pipeline calls it once on the whole (scaled) array, the chunked
+    executor jits it per chunk and accumulates the pools, and the stream
+    engine's ``summarize_chunk`` wraps it in per-chunk feature scaling.
+    The stage parameters arrive as a :class:`LevelSpec` (the base
+    partition/local sections expressed in the reduce-tree vocabulary —
+    ``spec.level_schedule()[0]``).
+    """
+    be = get_backend(backend)
+    part: Partition = get_partitioner(lv.scheme)(xs, lv.n_sub,
+                                                 lv.capacity_factor)
+    parts, part_w = gather_partitions(xs, part)
+    cap = parts.shape[1]
+    k_local = max(1, cap // lv.compression)
+    local = local_stage(parts, part_w, k_local, iters=lv.iters,
+                        key=key, init=lv.init, backend=be)
+    d = xs.shape[-1]
+    return (local.centers.reshape(lv.n_sub * k_local, d),
+            local.counts.reshape(lv.n_sub * k_local),
+            part.n_dropped)
+
+
+def merge_pool(pool: Array, pool_w: Array, merge: MergeSpec, key: Array, *,
+               backend: BackendSpec = None) -> KMeansResult:
+    """The merge ("host part") k-means over a weighted representative pool.
+
+    ``merge.weighted`` weights each representative by its member count;
+    otherwise every live (count > 0) representative votes equally, exactly
+    as the paper merges.  Dead pool slots (count 0) carry no weight either
+    way."""
+    be = get_backend(backend)
+    merge_w = (pool_w if merge.weighted
+               else (pool_w > 0).astype(pool.dtype))
+    return kmeans(pool, merge.k, weights=merge_w, iters=merge.iters,
+                  key=key, init=merge.init, backend=be,
+                  restarts=merge.restarts)
 
 
 def reduce_pool(pool: Array, pool_w: Array, level: LevelSpec, key: Array,
@@ -107,27 +176,25 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
     be = get_backend(backend if backend is not None
                      else spec.execution.backend)
 
-    xs, params = feature_scale(x) if spec.scale else (x, None)
-
-    part: Partition = get_partitioner(spec.partition.scheme)(
-        xs, spec.partition.n_sub, spec.partition.capacity_factor)
-
-    parts, part_w = gather_partitions(xs, part)
-    cap = parts.shape[1]
-    k_local = max(1, cap // spec.local.compression)
-
-    local = local_stage(parts, part_w, k_local, iters=spec.local.iters,
-                        key=key_local, init=spec.local.init, backend=be)
-
     d = x.shape[-1]
-    n_sub = spec.partition.n_sub
-    local_centers = local.centers.reshape(n_sub * k_local, d)
-    local_counts = local.counts.reshape(n_sub * k_local)
+    if spec.scale:
+        lo = jnp.min(x, axis=0)
+        span = jnp.maximum(jnp.max(x, axis=0) - lo, 1e-9)
+        params = (lo, span)
+    else:  # identity scaling: (x - 0) / 1 is bit-exact, one code path
+        lo, span = jnp.zeros((d,), x.dtype), jnp.ones((d,), x.dtype)
+        params = None
+
+    # the SAME compiled stage the chunked executor folds per chunk — the
+    # resident fit is literally the one-chunk schedule, so the out-of-core
+    # parity pin holds by construction (for every dtype: sharing the trace
+    # sidesteps jit-vs-eager bf16 rounding differences)
+    local_centers, local_counts, n_dropped = _fold_scaled_chunk(
+        x, lo, span, key_local, lv=spec.level_schedule()[0], backend=be)
 
     # hierarchical reduce tree: recursively re-partition the weighted center
     # pool until it is small enough for the merge stage (spec.levels is ()
     # for the paper's flat two-level pipeline — the loop is a no-op there)
-    n_dropped = part.n_dropped
     for i, lvl in enumerate(spec.levels):
         local_centers, local_counts, w_dropped = reduce_pool(
             local_centers, local_counts, lvl,
@@ -137,13 +204,8 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
         # visible in the same n_dropped channel as the base partition
         n_dropped = n_dropped + jnp.round(w_dropped).astype(jnp.int32)
 
-    merge_w = (local_counts if spec.merge.weighted
-               else (local_counts > 0).astype(x.dtype))
-
-    merged = kmeans(local_centers, spec.merge.k, weights=merge_w,
-                    iters=spec.merge.iters, key=key_global,
-                    init=spec.merge.init, backend=be,
-                    restarts=spec.merge.restarts)
+    merged = merge_pool(local_centers, local_counts, spec.merge, key_global,
+                        backend=be)
 
     centers = merged.centers
     if spec.scale:
@@ -152,6 +214,164 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
     total_sse = sse_fn(x, centers)
     return SampledClusteringResult(centers, total_sse, local_centers,
                                    local_counts, n_dropped)
+
+
+# ---------------------------------------------------------------------------
+# The out-of-core chunked executor (mode="chunked")
+# ---------------------------------------------------------------------------
+
+def scale_pass(source, chunk_points: int, *, prefetch: int = 2,
+               eps: float = 1e-9) -> tuple[Array, Array]:
+    """Streaming feature-scale parameters: one pass of running per-attribute
+    min/max over the source's chunks instead of a whole-array
+    :func:`feature_scale`.  Returns the same ``(lo, span)`` pair (span
+    clamped at ``eps``), bit-for-bit equal to the resident computation when
+    the source fits in one chunk."""
+    from repro.data.source import prefetch_to_device
+    lo = hi = None
+    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch):
+        clo, chi = jnp.min(chunk, axis=0), jnp.max(chunk, axis=0)
+        lo = clo if lo is None else jnp.minimum(lo, clo)
+        hi = chi if hi is None else jnp.maximum(hi, chi)
+    if lo is None:
+        raise ValueError("scale_pass: the source yielded no chunks")
+    return lo, jnp.maximum(hi - lo, eps)
+
+
+def sse_pass(source, centers: Array, chunk_points: int, *,
+             prefetch: int = 2) -> Array:
+    """Chunked exact SSE: the final-accuracy pass of the out-of-core
+    executor.  Memory stays O(chunk_points · k); a single-chunk traversal
+    is the identical ``sse_fn(x, centers)`` call the batch pipeline makes."""
+    from repro.data.source import prefetch_to_device
+    total = None
+    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch):
+        s = sse_fn(chunk, centers)
+        total = s if total is None else total + s
+    if total is None:
+        raise ValueError("sse_pass: the source yielded no chunks")
+    return total
+
+
+class ChunkStats(NamedTuple):
+    """Out-of-core accounting from one :func:`fit_chunked` run — what the
+    acceptance tests use to prove the dataset never sat in one place."""
+    n_points: int          # total rows folded through the pipeline
+    n_chunks: int          # chunks the fold pass consumed
+    max_chunk_points: int  # largest single resident chunk (rows)
+    pool_size: int         # representative pool rows the merge stage saw
+    prefetch: int          # chunks in flight at once (host→device buffer)
+    passes: int            # data passes: fold (+ scale) (+ exact SSE)
+
+
+@functools.partial(jax.jit, static_argnames=("lv", "backend"))
+def _fold_scaled_chunk(chunk: Array, lo: Array, span: Array, key: Array, *,
+                       lv: LevelSpec, backend) -> tuple[Array, Array, Array]:
+    """jit wrapper over :func:`chunk_fold` that applies the *global* scale
+    parameters to one chunk.  Compiled once per (chunk shape, level spec,
+    backend) — with fixed-size chunks that is one trace plus at most one
+    ragged tail."""
+    return chunk_fold((chunk - lo) / span, lv, key, backend=backend)
+
+
+def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
+                backend: BackendSpec = None
+                ) -> tuple[SampledClusteringResult, ChunkStats]:
+    """Run the full spec-declared pipeline **out of core** over a
+    :class:`repro.data.source.DataSource` (anything array-like auto-wraps):
+    the dataset only ever exists ``chunk.chunk_points`` rows at a time.
+
+    Passes over the data (all chunked + double-buffered to the device):
+
+      1. ``scale_pass`` — running min/max -> the global feature-scale
+         parameters (skipped when ``spec.scale`` is off);
+      2. the fold — each chunk is scaled, partitioned and summarised by the
+         jitted :func:`chunk_fold`; the weighted center pools concatenate
+         and per-chunk Algorithm-2 drops accumulate into ``n_dropped``;
+         a ragged tail chunk smaller than ``n_sub`` clamps its partition
+         count to the chunk size so no mandatory partition is ever empty;
+      3. ``spec.levels`` reduce the accumulated pool and ``merge_pool``
+         produces the k global centers — identical code to the resident
+         pipeline;
+      4. ``sse_pass`` — chunked exact SSE (``spec.chunk.sse="exact"``), or
+         a free pool-weighted estimate (``"pool"``, no extra pass).
+
+    Parity pin: a source that fits in ONE chunk reproduces
+    :func:`fit_from_spec` bit-for-bit under the same key (chunk 0 reuses
+    the base local key; the scale, fold, level, merge, and SSE stages are
+    the same functions).  Returns ``(result, ChunkStats)``.
+    """
+    from repro.data.source import as_source, prefetch_to_device
+    source = as_source(source)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    key_local, key_global = jax.random.split(key)
+    be = get_backend(backend if backend is not None
+                     else spec.execution.backend)
+    cp = spec.chunk.chunk_points
+    depth = spec.chunk.prefetch
+    base = spec.level_schedule()[0]
+
+    passes = 1
+    lo = span = None
+    if spec.scale:
+        lo, span = scale_pass(source, cp, prefetch=depth)
+        passes += 1
+
+    pools, pool_ws = [], []
+    n_dropped = jnp.asarray(0, jnp.int32)
+    n_points = n_chunks = max_chunk = 0
+    for i, chunk in enumerate(prefetch_to_device(source.chunks(cp), depth)):
+        m, d = chunk.shape
+        if m == 0:
+            continue
+        if lo is None:  # scale off: identity parameters, same code path
+            lo = jnp.zeros((d,), chunk.dtype)
+            span = jnp.ones((d,), chunk.dtype)
+        lv = (base if m >= base.n_sub
+              else dataclasses.replace(base, n_sub=max(1, m)))
+        ck = (key_local if i == 0
+              else jax.random.fold_in(key_local, _CHUNK_KEY_OFFSET + i))
+        c, w, nd = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv, backend=be)
+        pools.append(c)
+        pool_ws.append(w)
+        n_dropped = n_dropped + nd
+        n_points += m
+        n_chunks += 1
+        max_chunk = max(max_chunk, m)
+    if n_chunks == 0:
+        raise ValueError("fit_chunked: the source yielded no points")
+
+    pool = pools[0] if len(pools) == 1 else jnp.concatenate(pools, axis=0)
+    pool_w = (pool_ws[0] if len(pool_ws) == 1
+              else jnp.concatenate(pool_ws, axis=0))
+
+    for j, lvl in enumerate(spec.levels):
+        pool, pool_w, w_dropped = reduce_pool(
+            pool, pool_w, lvl, jax.random.fold_in(key_local, 1 + j),
+            backend=be)
+        n_dropped = n_dropped + jnp.round(w_dropped).astype(jnp.int32)
+
+    merged = merge_pool(pool, pool_w, spec.merge, key_global, backend=be)
+
+    centers, local_centers = merged.centers, pool
+    if spec.scale:
+        centers = unscale(centers, (lo, span))
+        local_centers = unscale(local_centers, (lo, span))
+
+    if spec.chunk.sse == "exact":
+        total_sse = sse_pass(source, centers, cp, prefetch=depth)
+        passes += 1
+    else:  # "pool": weighted SSE of the representatives, no extra pass
+        total_sse = sse_fn(local_centers, centers, weights=pool_w)
+
+    result = SampledClusteringResult(centers, total_sse, local_centers,
+                                     pool_w, n_dropped)
+    stats = ChunkStats(n_points=n_points, n_chunks=n_chunks,
+                       max_chunk_points=max_chunk,
+                       pool_size=int(pool.shape[0]), prefetch=depth,
+                       passes=passes)
+    return result, stats
 
 
 _SPEC_KWARGS = ("scheme", "n_sub", "compression", "local_iters",

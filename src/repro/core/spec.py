@@ -29,8 +29,9 @@ from typing import Any, Mapping, Optional
 
 from .backend import BackendSpec, LloydBackend
 
-_MODES = ("auto", "single", "shard_map", "stream")
+_MODES = ("auto", "single", "shard_map", "stream", "chunked")
 _MERGE_PATHS = ("replicated", "distributed")
+_SSE_POLICIES = ("exact", "pool")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -82,6 +83,39 @@ class LevelSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class ChunkSpec:
+    """How the out-of-core executor (``mode="chunked"``) schedules data.
+
+    ``chunk_points`` is the fixed chunk row count the executor feeds the
+    jitted per-chunk fold (one ragged tail chunk at most; a
+    ``chunk_points >= n_points`` run is a single chunk — the bit-for-bit
+    parity case with the single-device pipeline).  ``prefetch`` is the
+    host→device double-buffer depth (how many chunks may be resident /
+    in flight at once).  ``sse`` picks the final-accuracy policy:
+    ``"exact"`` makes one more chunked pass over the data through the
+    backend's assignment (the paper's SSE, bounded memory), ``"pool"``
+    scores only the weighted representative pool (no extra data pass —
+    an upper-bound style estimate).
+    """
+    chunk_points: int = 65536
+    prefetch: int = 2
+    sse: str = "exact"
+
+    def __post_init__(self):
+        if self.chunk_points < 1:
+            raise ValueError(
+                f"ChunkSpec: chunk_points must be >= 1, got "
+                f"{self.chunk_points}")
+        if self.prefetch < 1:
+            raise ValueError(
+                f"ChunkSpec: prefetch must be >= 1, got {self.prefetch}")
+        if self.sse not in _SSE_POLICIES:
+            raise ValueError(
+                f"unknown chunk sse policy {self.sse!r}; known: "
+                f"{_SSE_POLICIES}")
+
+
+@dataclasses.dataclass(frozen=True)
 class MergeSpec:
     """The merge ("host part") k-means over the sampled representatives.
 
@@ -103,8 +137,11 @@ class ExecutionSpec:
     ``backend`` names a :class:`repro.core.backend.LloydBackend` (``"auto"``
     consults ``REPRO_KMEANS_BACKEND`` then the hardware); ``mode`` picks the
     engine: ``"single"`` (one-device vmap), ``"shard_map"`` (pod-scale,
-    needs a mesh), ``"stream"`` (incremental coreset engine), or ``"auto"``
-    (shard_map when a mesh is supplied, else single).  ``mesh_axis`` is the
+    needs a mesh), ``"stream"`` (incremental coreset engine), ``"chunked"``
+    (out-of-core: the data arrives as a :class:`repro.data.source.DataSource`
+    and only ever lives chunk-by-chunk — see :class:`ChunkSpec`), or
+    ``"auto"`` (shard_map when a mesh is supplied, chunked when the input is
+    a non-resident DataSource, else single).  ``mesh_axis`` is the
     mesh axis the data is sharded along; ``donate`` lets jit reuse the input
     buffer for single-mode fits (the points are consumed anyway).
     ``merge_path`` picks the shard_map merge strategy: ``"replicated"``
@@ -146,6 +183,7 @@ class ClusterSpec:
     execution: ExecutionSpec = ExecutionSpec()
     scale: bool = True
     levels: tuple = ()          # tuple[LevelSpec, ...] — extra reduce levels
+    chunk: ChunkSpec = ChunkSpec()  # out-of-core schedule (mode="chunked")
 
     def __post_init__(self):
         # keep the spec hashable (jit-static) when levels arrives as a list
@@ -161,18 +199,23 @@ class ClusterSpec:
              backend: BackendSpec = None, restarts: int = 4,
              mode: str = "auto", mesh_axis: str = "data",
              donate: bool = False,
-             levels: "int | tuple" = ()) -> "ClusterSpec":
+             levels: "int | tuple" = (),
+             chunk_points: Optional[int] = None) -> "ClusterSpec":
         """Build a spec from the historical flat kwarg vocabulary (what
         ``sampled_kmeans`` took before specs existed).  ``init`` seeds both
         stages unless ``merge_init`` overrides the merge stage.  ``levels``
         takes a tuple of :class:`LevelSpec` or an int total level count
-        (``levels=n`` appends ``n - 1`` default reduce levels)."""
+        (``levels=n`` appends ``n - 1`` default reduce levels).
+        ``chunk_points`` sizes the out-of-core chunk schedule (other
+        :class:`ChunkSpec` knobs keep their defaults)."""
         if isinstance(levels, int):
             if levels < 1:
                 raise ValueError(f"levels={levels}: the reduce tree has at "
                                  f"least the base local stage (levels >= 1)")
             levels = tuple(LevelSpec() for _ in range(levels - 1))
         return cls(
+            chunk=(ChunkSpec(chunk_points=chunk_points)
+                   if chunk_points is not None else ChunkSpec()),
             partition=PartitionSpec(scheme=scheme, n_sub=n_sub,
                                     capacity_factor=capacity_factor),
             local=LocalSpec(compression=compression, iters=local_iters,
@@ -207,6 +250,7 @@ class ClusterSpec:
             "partition": (PartitionSpec, d.pop("partition", {})),
             "local": (LocalSpec, d.pop("local", {})),
             "execution": (ExecutionSpec, d.pop("execution", {})),
+            "chunk": (ChunkSpec, d.pop("chunk", {})),
         }
         kwargs = {}
         for field, (klass, sub) in parts.items():
@@ -272,6 +316,37 @@ class ClusterSpec:
             sizes.append(n)
         return tuple(sizes)
 
+    def chunked_pool_schedule(self, n_points: int) -> tuple:
+        """Pool accounting for the out-of-core executor: every chunk of
+        ``chunk.chunk_points`` rows contributes its own base-stage pool
+        (the executor clamps ``n_sub`` to the chunk size, so a ragged tail
+        never creates empty mandatory partitions), the chunk pools
+        concatenate, and the extra ``levels`` then shrink the combined pool
+        exactly as in :meth:`pool_schedule`.  ``chunked_pool_schedule(n)[-1]``
+        is what the merge stage sees — the planner rejects chunked plans
+        where it falls below ``merge.k``."""
+        base = self.level_schedule()[0]
+
+        def chunk_pool(m: int) -> int:
+            n_sub = max(1, min(base.n_sub, m))
+            cap = -(-m // n_sub)
+            if base.scheme == "unequal":
+                cap = min(int(cap * base.capacity_factor), m)
+            return n_sub * max(1, cap // base.compression)
+
+        n_full, tail = divmod(int(n_points), self.chunk.chunk_points)
+        pool = n_full * chunk_pool(self.chunk.chunk_points)
+        if tail:
+            pool += chunk_pool(tail)
+        sizes, n = [pool], pool
+        for lv in self.levels:
+            cap = -(-n // lv.n_sub)
+            if lv.scheme == "unequal":
+                cap = min(int(cap * lv.capacity_factor), n)
+            n = lv.n_sub * max(1, cap // lv.compression)
+            sizes.append(n)
+        return tuple(sizes)
+
     def replace(self, **kwargs) -> "ClusterSpec":
         """``dataclasses.replace`` that also reaches one level down:
         ``spec.replace(mode="stream", n_sub=16)`` touches the right
@@ -284,7 +359,8 @@ class ClusterSpec:
             if name in top:
                 updates[name] = value
                 continue
-            owners = [s for s in ("partition", "local", "merge", "execution")
+            owners = [s for s in ("partition", "local", "merge", "execution",
+                                  "chunk")
                       if name in {f.name for f in dataclasses.fields(
                           type(getattr(self, s)))}]
             if not owners:

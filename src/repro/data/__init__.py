@@ -1,1 +1,8 @@
-"""data subpackage."""
+"""data subpackage: synthetic generators + chunked out-of-core sources."""
+from .source import (ArraySource, DataSource, IterSource, SyntheticSource,
+                     as_source, prefetch_to_device)
+
+__all__ = [
+    "DataSource", "ArraySource", "IterSource", "SyntheticSource",
+    "as_source", "prefetch_to_device",
+]

@@ -4,8 +4,9 @@ The batch pipeline (:func:`repro.core.pipeline.sampled_kmeans`) runs
 partition -> local k-means -> merge exactly once.  A data stream wants the
 same two levels but *incrementally*:
 
-  1. each fixed-size chunk is partitioned and summarised by the existing
-     ``local_stage`` machinery (the paper's "device part", unchanged);
+  1. each fixed-size chunk is partitioned and summarised by the shared
+     ``chunk_fold`` stage (the paper's "device part", unchanged — the same
+     substrate the batch and out-of-core executors fold over);
   2. the resulting weighted local centers are folded into a bounded,
      exponentially-decayed **coreset buffer** — the paper's "sampled
      representatives", now persistent.  Scalable K-Means++ (Bahmani et al.)
@@ -38,10 +39,9 @@ import jax.numpy as jnp
 from repro.core.backend import BackendSpec, LloydBackend, get_backend
 from repro.core.kmeans import kmeans, pairwise_sqdist
 from repro.core.metrics import sse as sse_fn
-from repro.core.pipeline import local_stage, reduce_pool
-from repro.core.spec import ClusterSpec
-from repro.core.subcluster import (feature_scale, gather_partitions,
-                                   get_partitioner, unscale)
+from repro.core.pipeline import chunk_fold, reduce_pool
+from repro.core.spec import ClusterSpec, LevelSpec
+from repro.core.subcluster import feature_scale, unscale
 
 Array = jax.Array
 
@@ -104,19 +104,18 @@ def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
 
     The chunk is feature-scaled on its own min/max (the partition landmarks
     are chunk-local, exactly as each batch invocation scales on its input),
-    then partitioned and vmap-k-means'd; centers come back in input space.
+    then folded through the shared :func:`repro.core.pipeline.chunk_fold`
+    stage — the same substrate the batch and out-of-core executors use;
+    centers come back in input space.
     """
     xs, params = feature_scale(chunk)
-    part = get_partitioner(cfg.scheme)(xs, cfg.n_sub, cfg.capacity_factor)
-    parts, part_w = gather_partitions(xs, part)
-    k_local = max(1, parts.shape[1] // cfg.compression)
-    local = local_stage(parts, part_w, k_local, iters=cfg.local_iters,
-                        key=key, init=cfg.init_mode,
-                        backend=backend if backend is not None else cfg.backend)
-    d = chunk.shape[-1]
-    centers = unscale(local.centers.reshape(-1, d), params)
-    weights = local.counts.reshape(-1)
-    return centers, weights
+    lv = LevelSpec(n_sub=cfg.n_sub, compression=cfg.compression,
+                   iters=cfg.local_iters, init=cfg.init_mode,
+                   scheme=cfg.scheme, capacity_factor=cfg.capacity_factor)
+    centers, weights, _ = chunk_fold(
+        xs, lv, key,
+        backend=backend if backend is not None else cfg.backend)
+    return unscale(centers, params), weights
 
 
 def fold_coreset(coreset: Array, coreset_w: Array, new_pts: Array,

@@ -1,0 +1,232 @@
+"""CI perf-regression gate: compare fresh ``BENCH_*.json`` artifacts against
+the committed baselines and fail on regression.
+
+  PYTHONPATH=src python -m benchmarks.gate                 # gate current run
+  PYTHONPATH=src python -m benchmarks.gate --self-test     # prove it trips
+
+Tolerance policy (per metric, see ``TOLERANCES``):
+
+* ``points_per_sec`` — higher is better; fail below 75% of baseline
+  (i.e. a 30% injected slowdown must trip, run-to-run jitter must not).
+* ``us_best`` / ``us_per_iter`` — lower is better; 50% relative slack
+  (wall-clock on shared CI runners is noisy; throughput is the primary
+  timing gate).  Skipped entirely for interpreter-mode lloyd artifacts,
+  where "timing" is Pallas-interpreter overhead, not kernel cost.
+* ``sse`` / ``sse_ratio`` — lower is better, 5% relative slack: quality
+  is deterministic per (spec, seed), so a 10% inflation must trip.
+* ``rel_sse`` / ``overhead`` — already-relative quantities; absolute
+  slack of 0.05.
+* ``peak_rss_mb`` — 50% relative slack; catches out-of-core paths that
+  quietly start materializing the dataset.
+
+Throughput and wall-clock comparisons are **calibration-normalized**: every
+artifact records ``calib_mflops`` (the machine-speed probe in
+``repro.telemetry.calibrate``), and when both sides carry it the current
+number is rescaled to the baseline machine before the tolerance applies.
+Baselines generated on one box therefore gate runs on another.
+
+A current artifact with no committed baseline is a *note*, never a failure
+(new benchmarks should not need a same-PR baseline dance); updating a
+baseline is an explicit, reviewed diff under
+``benchmarks/artifacts/baselines/``.
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import pathlib
+import sys
+
+from benchmarks.trajectory import ARTIFACTS, ingest
+
+BASELINES = ARTIFACTS / "baselines"
+
+# metric -> (direction, kind, tolerance, calibration-normalized?)
+#   direction: which way is better;  kind: "rel" or "abs" slack
+TOLERANCES = {
+    "points_per_sec": ("higher", "rel", 0.25, True),
+    "us_best":        ("lower",  "rel", 0.50, True),
+    "us_per_iter":    ("lower",  "rel", 0.50, True),
+    "sse":            ("lower",  "rel", 0.05, False),
+    "sse_ratio":      ("lower",  "rel", 0.05, False),
+    "rel_sse":        ("lower",  "abs", 0.05, False),
+    "overhead":       ("lower",  "abs", 0.05, False),
+    "peak_rss_mb":    ("lower",  "rel", 0.50, False),
+}
+
+
+def _normalize_value(metric, value, base_calib, cur_calib):
+    """Rescale *value* (measured on the current machine) to the baseline
+    machine using the calib probes; returns value unchanged when either
+    probe is missing."""
+    direction, _, _, calibrated = TOLERANCES[metric]
+    if not calibrated or not base_calib or not cur_calib:
+        return value
+    ratio = base_calib / cur_calib
+    # throughput scales with machine speed; wall-clock scales inversely
+    return value * ratio if direction == "higher" else value / ratio
+
+
+def compare_points(baseline_points, current_points):
+    """Returns ``(checks, notes)``; each check is a dict with a ``status``
+    of ``"ok"`` or ``"FAIL"``."""
+    base = {p["key"]: p for p in baseline_points}
+    cur = {p["key"]: p for p in current_points}
+    checks, notes = [], []
+    for key in sorted(cur):
+        if key not in base:
+            notes.append(f"no baseline for {key} ({cur[key]['name']}) — "
+                         f"add one under baselines/ in a reviewed diff")
+            continue
+        b, c = base[key], cur[key]
+        for metric, bval in sorted(b["metrics"].items()):
+            if metric not in TOLERANCES:
+                continue
+            if metric not in c["metrics"]:
+                notes.append(f"{key}: metric {metric} missing from "
+                             f"current run")
+                continue
+            direction, kind, tol, calibrated = TOLERANCES[metric]
+            if calibrated and "interpret" in (c.get("mode") or ""):
+                continue        # interpreter timings gate nothing
+            cval = _normalize_value(metric, c["metrics"][metric],
+                                    b.get("calib_mflops"),
+                                    c.get("calib_mflops"))
+            if kind == "rel":
+                if bval == 0:
+                    continue
+                if direction == "higher":
+                    bad = cval < bval * (1.0 - tol)
+                else:
+                    bad = cval > bval * (1.0 + tol)
+            else:               # absolute slack
+                if direction == "higher":
+                    bad = cval < bval - tol
+                else:
+                    bad = cval > bval + tol
+            checks.append({
+                "key": key, "name": c["name"], "metric": metric,
+                "baseline": bval, "current": c["metrics"][metric],
+                "normalized": cval, "tol": tol, "kind": kind,
+                "direction": direction,
+                "status": "FAIL" if bad else "ok",
+            })
+    for key in sorted(set(base) - set(cur)):
+        notes.append(f"baseline {key} ({base[key]['name']}) not exercised "
+                     f"by this run")
+    return checks, notes
+
+
+def report(checks, notes, out=sys.stdout) -> bool:
+    """Print a readable gate report; returns True when every check passed."""
+    failed = [c for c in checks if c["status"] == "FAIL"]
+    for c in checks:
+        arrow = ">=" if c["direction"] == "higher" else "<="
+        slack = (f"{c['tol']:.0%} rel" if c["kind"] == "rel"
+                 else f"+{c['tol']} abs")
+        mark = "FAIL" if c["status"] == "FAIL" else "  ok"
+        print(f"{mark}  {c['name']:<28} {c['metric']:<16} "
+              f"cur={c['normalized']:<12.4g} {arrow} "
+              f"base={c['baseline']:<12.4g} ({slack})", file=out)
+    for n in notes:
+        print(f"note  {n}", file=out)
+    print(f"# gate: {len(checks) - len(failed)}/{len(checks)} checks ok, "
+          f"{len(failed)} failed, {len(notes)} notes", file=out)
+    return not failed
+
+
+def _inject(points, metric, factor):
+    """Deep-copied *points* with every occurrence of *metric* scaled —
+    the synthetic-regression half of ``--self-test``."""
+    out = copy.deepcopy(points)
+    for p in out:
+        if metric in p["metrics"]:
+            p["metrics"][metric] *= factor
+    return out
+
+
+def self_test(baseline_points) -> bool:
+    """Prove the gate trips: a clean copy must pass, a 30% throughput
+    regression must fail, a 10% SSE inflation must fail."""
+    if not any("points_per_sec" in p["metrics"] and "sse" in p["metrics"]
+               for p in baseline_points):
+        # no committed baselines yet (or stripped checkout): exercise the
+        # machinery on a synthetic point so --self-test still proves logic
+        baseline_points = baseline_points + [{
+            "key": "selftest|single|auto", "bench": "spec_file",
+            "name": "selftest",
+            "metrics": {"points_per_sec": 1e6, "sse": 100.0},
+            "calib_mflops": None, "mode": "single",
+            "source": "<synthetic>",
+        }]
+        print("note  no real baselines found — self-test uses a synthetic "
+              "point")
+
+    ok = True
+
+    clean_checks, _ = compare_points(baseline_points, baseline_points)
+    if not clean_checks or any(c["status"] == "FAIL" for c in clean_checks):
+        print("SELF-TEST FAIL: clean copy did not pass cleanly")
+        ok = False
+    else:
+        print(f"self-test: clean copy passes "
+              f"({len(clean_checks)} checks)   ... ok")
+
+    slow = _inject(baseline_points, "points_per_sec", 0.70)
+    slow_checks, _ = compare_points(baseline_points, slow)
+    tripped = [c for c in slow_checks
+               if c["status"] == "FAIL" and c["metric"] == "points_per_sec"]
+    if not tripped:
+        print("SELF-TEST FAIL: 30% points/sec regression not caught")
+        ok = False
+    else:
+        print(f"self-test: 30% slowdown trips {len(tripped)} check(s) ... ok")
+
+    inflated = _inject(_inject(baseline_points, "sse", 1.10),
+                       "sse_ratio", 1.10)
+    sse_checks, _ = compare_points(baseline_points, inflated)
+    tripped = [c for c in sse_checks
+               if c["status"] == "FAIL"
+               and c["metric"] in ("sse", "sse_ratio")]
+    if not tripped:
+        print("SELF-TEST FAIL: 10% SSE inflation not caught")
+        ok = False
+    else:
+        print(f"self-test: 10% SSE inflation trips {len(tripped)} "
+              f"check(s) ... ok")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baselines", default=str(BASELINES),
+                    help="directory of committed baseline BENCH_*.json")
+    ap.add_argument("--current", default=str(ARTIFACTS),
+                    help="directory of this run's BENCH_*.json")
+    ap.add_argument("--self-test", action="store_true",
+                    help="inject synthetic regressions and assert the "
+                         "gate trips (and that a clean copy passes)")
+    args = ap.parse_args(argv)
+
+    baseline_points, bskip = ingest(args.baselines) \
+        if pathlib.Path(args.baselines).is_dir() else ([], [])
+    for name, why in bskip:
+        print(f"note  baseline skipped {name}: {why}")
+
+    if args.self_test:
+        return 0 if self_test(baseline_points) else 1
+
+    current_points, cskip = ingest(args.current)
+    for name, why in cskip:
+        print(f"note  current skipped {name}: {why}")
+    if not baseline_points:
+        print("# gate: no baselines committed yet — nothing to compare "
+              "(add artifacts under benchmarks/artifacts/baselines/)")
+        return 0
+    checks, notes = compare_points(baseline_points, current_points)
+    return 0 if report(checks, notes) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

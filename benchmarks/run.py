@@ -24,12 +24,10 @@ ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts"
 
 
 def _peak_rss_mb() -> float:
-    """Process high-water-mark resident set, MB (ru_maxrss is KB on Linux,
-    bytes on macOS)."""
-    import resource
-    import sys as _sys
-    peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-    return peak / 1024.0 if _sys.platform != "darwin" else peak / 2 ** 20
+    """Process high-water-mark resident set, MB (delegates to the telemetry
+    helper so every artifact reports the same number the run loggers emit)."""
+    from repro.telemetry import peak_rss_mb
+    return peak_rss_mb()
 
 
 def run_spec_file(path: str, csv) -> None:
@@ -80,10 +78,17 @@ def run_spec_file(path: str, csv) -> None:
     # upload captures serialized-spec runs too (chunked runs get their own
     # BENCH_chunked_* prefix so the out-of-core perf trajectory is greppable)
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    from repro.core.backend import get_backend
+    from repro.telemetry import calibrate
     record = {
+        "schema": 1,
         "bench": "spec_file",
+        "name": name,
         "spec_file": str(path),
+        "spec_hash": spec.stable_hash(),
         "mode": mode,
+        "backend": get_backend(spec.execution.backend).name,
+        "calib_mflops": calibrate(),
         "workload": {"n": n, "dim": dim, "seed": seed, "repeats": repeats},
         "pool_schedule": list(spec.chunked_pool_schedule(n) if chunked
                               else spec.pool_schedule(n)),

@@ -1,0 +1,201 @@
+"""Perf trajectory store: fold every ``BENCH_*.json`` artifact into one
+time-series, keyed by ``(spec_hash, mode, backend)``.
+
+Every benchmark in this repo drops a JSON artifact under
+``benchmarks/artifacts/`` (``run.py --spec``, ``perf_iter.py --lloyd/--api/
+--levels``, ``dist_smoke.py``).  Their schemas differ per bench; this module
+normalizes each into flat *points* — ``{key, metrics, calib_mflops, ...}`` —
+so the CI gate (``benchmarks/gate.py``) and any plotting notebook consume a
+single shape regardless of which harness produced the number.
+
+  PYTHONPATH=src python -m benchmarks.trajectory \\
+      --artifacts benchmarks/artifacts --merge trajectory.json \\
+      --out trajectory.json --label $GIT_SHA
+
+Malformed or partial artifacts are skipped (and reported), never fatal: the
+trajectory must survive a benchmark crashing halfway through a run.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+SCHEMA = 1
+
+# metrics worth tracking per bench kind; anything absent is simply omitted
+# from the point (partial artifacts yield partial points, not errors)
+_SPEC_METRICS = ("points_per_sec", "us_best", "sse", "rel_sse",
+                 "peak_rss_mb")
+
+
+class SkipArtifact(Exception):
+    """Raised by normalize() when a record can't yield any point."""
+
+
+def _key(spec_hash: str, mode: str, backend: str) -> str:
+    return f"{spec_hash}|{mode}|{backend}"
+
+
+def _point(key, bench, name, metrics, record, source):
+    if not metrics:
+        raise SkipArtifact(f"{source}: no recognized metrics")
+    return {
+        "key": key,
+        "bench": bench,
+        "name": name,
+        "metrics": metrics,
+        "calib_mflops": record.get("calib_mflops"),
+        "mode": record.get("mode"),
+        "source": source,
+    }
+
+
+def normalize(record, source: str = "<mem>") -> list:
+    """One raw artifact dict -> list of trajectory points.
+
+    Dispatches on the ``bench`` field.  Raises :class:`SkipArtifact` for
+    records that can't be keyed or carry no known metric.
+    """
+    if not isinstance(record, dict):
+        raise SkipArtifact(f"{source}: not a JSON object")
+    bench = record.get("bench")
+    if bench is None:
+        raise SkipArtifact(f"{source}: missing 'bench' field")
+
+    if bench in ("spec_file", "dist_smoke"):
+        name = record.get("name") or pathlib.Path(source).stem.replace(
+            "BENCH_", "").replace("spec_", "")
+        spec_hash = record.get("spec_hash", name)
+        mode = record.get("mode", "?")
+        backend = record.get("backend", "?")
+        metrics = {m: float(record[m]) for m in _SPEC_METRICS
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(spec_hash, mode, backend), bench, name,
+                       metrics, record, source)]
+
+    if bench == "lloyd_step":
+        req = record.get("requested") or {}
+        shape = "M{m}_d{d}_K{k}".format(
+            m=req.get("m", "?"), d=req.get("d", "?"), k=req.get("k", "?"))
+        mode = record.get("mode", "?")
+        pts = []
+        for be, vals in (record.get("backends") or {}).items():
+            if not isinstance(vals.get("us_per_iter"), (int, float)):
+                continue
+            pts.append(_point(
+                _key(f"lloyd_{shape}", mode, be), bench,
+                f"lloyd_{shape}/{be}",
+                {"us_per_iter": float(vals["us_per_iter"])},
+                record, source))
+        if not pts:
+            raise SkipArtifact(f"{source}: lloyd_step with no backends")
+        return pts
+
+    if bench == "api_facade_overhead":
+        sh = record.get("shape") or {}
+        name = "api_N{n}_d{d}_K{k}".format(
+            n=sh.get("n", "?"), d=sh.get("d", "?"), k=sh.get("k", "?"))
+        metrics = {m: float(record[m])
+                   for m in ("overhead", "us_direct", "us_facade")
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(name, "single", "auto"), bench, name,
+                       metrics, record, source)]
+
+    if bench == "hierarchical_levels":
+        sh = record.get("shape") or {}
+        name = "levels_N{n}_d{d}_K{k}".format(
+            n=sh.get("n", "?"), d=sh.get("d", "?"), k=sh.get("k", "?"))
+        metrics = {m: float(record[m])
+                   for m in ("sse_ratio", "speedup", "us_flat", "us_hier")
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(name, "single", "auto"), bench, name,
+                       metrics, record, source)]
+
+    raise SkipArtifact(f"{source}: unknown bench kind {bench!r}")
+
+
+def ingest(artifact_dir) -> tuple:
+    """Normalize every ``BENCH_*.json`` under *artifact_dir* (non-recursive,
+    so ``baselines/`` copies are not double-counted).
+
+    Returns ``(points, skipped)`` where *skipped* is a list of
+    ``(filename, reason)`` for artifacts that could not be normalized.
+    """
+    points, skipped = [], []
+    d = pathlib.Path(artifact_dir)
+    for f in sorted(d.glob("BENCH_*.json")):
+        try:
+            record = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            skipped.append((f.name, f"unreadable: {e}"))
+            continue
+        try:
+            points.extend(normalize(record, f.name))
+        except SkipArtifact as e:
+            skipped.append((f.name, str(e)))
+    return points, skipped
+
+
+def load_trajectory(path):
+    """Read a trajectory JSON; returns the empty store if absent."""
+    p = pathlib.Path(path)
+    if not p.exists():
+        return {"schema": SCHEMA, "series": {}}
+    doc = json.loads(p.read_text())
+    if not isinstance(doc, dict) or "series" not in doc:
+        return {"schema": SCHEMA, "series": {}}
+    return doc
+
+
+def append_points(trajectory, points, label=None, t=None):
+    """Append *points* to *trajectory* in place (one entry per key per
+    label — re-running under the same label replaces, so CI retries don't
+    duplicate)."""
+    t = time.time() if t is None else t
+    series = trajectory.setdefault("series", {})
+    for p in points:
+        entry = dict(p, label=label, t=t)
+        entry.pop("key")
+        hist = series.setdefault(p["key"], [])
+        if label is not None:
+            hist[:] = [h for h in hist if h.get("label") != label]
+        hist.append(entry)
+    return trajectory
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--artifacts", default=str(ARTIFACTS),
+                    help="directory of BENCH_*.json files to ingest")
+    ap.add_argument("--merge", default=None, metavar="FILE",
+                    help="existing trajectory JSON to extend")
+    ap.add_argument("--out", default=None, metavar="FILE",
+                    help="where to write the merged trajectory "
+                         "(default: stdout)")
+    ap.add_argument("--label", default=None,
+                    help="run label (git sha / CI run id); same label "
+                         "replaces prior points for the same key")
+    args = ap.parse_args(argv)
+
+    points, skipped = ingest(args.artifacts)
+    for name, why in skipped:
+        print(f"# skipped {name}: {why}")
+    traj = load_trajectory(args.merge) if args.merge else {
+        "schema": SCHEMA, "series": {}}
+    append_points(traj, points, label=args.label)
+    blob = json.dumps(traj, indent=1, sort_keys=True)
+    if args.out:
+        pathlib.Path(args.out).write_text(blob)
+        print(f"# {len(points)} points ({len(skipped)} skipped) -> "
+              f"{args.out} [{len(traj['series'])} series]")
+    else:
+        print(blob)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

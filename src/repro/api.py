@@ -47,6 +47,7 @@ from repro.core.pipeline import (ChunkStats, SampledClusteringResult,
 from repro.core.spec import ClusterSpec
 from repro.core.subcluster import get_partitioner
 from repro.data.source import ArraySource, DataSource, as_source
+from repro.telemetry import NULL, RunLogger, get_run_logger
 
 Array = jax.Array
 
@@ -69,6 +70,7 @@ class ExecutionPlan:
     mesh: Optional[jax.sharding.Mesh] = None
     data_shape: Optional[tuple] = None
     schedule: tuple = ()           # tuple[LevelSpec, ...], base level first
+    logger: RunLogger = NULL       # resolved spec.execution.telemetry
 
     @property
     def k(self) -> int:
@@ -81,7 +83,8 @@ class ExecutionPlan:
 
 def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
          mesh: Optional[jax.sharding.Mesh] = None,
-         source: Optional[DataSource] = None) -> ExecutionPlan:
+         source: Optional[DataSource] = None,
+         logger: "RunLogger | str | None" = None) -> ExecutionPlan:
     """Resolve a declarative spec into an executable plan.
 
     Validates every registry name (partitioner, init schemes, backend) up
@@ -104,6 +107,10 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
         get_partitioner(lvl.scheme)
         get_init(lvl.init)
     backend = get_backend(spec.execution.backend)
+    # telemetry resolves like the backend: the declarative string becomes a
+    # live RunLogger exactly once, here
+    run_logger = get_run_logger(logger if logger is not None
+                                else spec.execution.telemetry)
     schedule = spec.level_schedule()
 
     mode = spec.execution.mode
@@ -149,7 +156,8 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
                     f"plan: {data_shape[0]} rows do not divide over "
                     f"{n_dev} devices along {axis!r}")
     return ExecutionPlan(spec=spec, mode=mode, backend=backend, mesh=mesh,
-                         data_shape=data_shape, schedule=schedule)
+                         data_shape=data_shape, schedule=schedule,
+                         logger=run_logger)
 
 
 def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
@@ -170,7 +178,7 @@ def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
         key = jax.random.PRNGKey(0)
     if pl.mode == "chunked":
         res, stats = fit_chunked(as_source(x), pl.spec, key,
-                                 backend=pl.backend)
+                                 backend=pl.backend, logger=pl.logger)
         return (res, stats) if return_stats else res
     if return_stats:
         return execute(pl, x, key), None
@@ -182,16 +190,26 @@ def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
                 f"'auto') for out-of-core sources")
         x = x.array
     if pl.mode == "single":
-        fit = fit_from_spec
         if pl.spec.execution.donate:
+            # under jit the host-side stage timers inside fit_from_spec
+            # disable themselves (trace-time noise); time the compiled
+            # call from out here instead
             fit = jax.jit(fit_from_spec,
                           static_argnames=("spec", "backend"),
                           donate_argnums=0)
-        return fit(x, pl.spec, key, backend=pl.backend)
+            with pl.logger.timer("fit_single_donated",
+                                 n=int(x.shape[0]), k=pl.spec.merge.k):
+                res = fit(x, pl.spec, key, backend=pl.backend)
+                if pl.logger is not NULL:
+                    jax.block_until_ready(res.sse)
+            return res
+        return fit_from_spec(x, pl.spec, key, backend=pl.backend,
+                             logger=pl.logger)
     if pl.mode == "shard_map":
         from repro.core.distributed import make_distributed_sampled_kmeans
         fn = make_distributed_sampled_kmeans(pl.mesh, spec=pl.spec,
-                                             backend=pl.backend)
+                                             backend=pl.backend,
+                                             logger=pl.logger)
         res = fn(x, key)
         return SampledClusteringResult(
             centers=res.centers, sse=res.sse, local_centers=res.local_centers,
@@ -200,7 +218,7 @@ def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
     if pl.mode == "stream":
         from repro.stream.engine import StreamConfig, StreamingClusterer
         sc = StreamingClusterer(StreamConfig.from_spec(pl.spec),
-                                backend=pl.backend)
+                                backend=pl.backend, logger=pl.logger)
         if isinstance(x, DataSource):
             state = None
             for chunk in x.chunks(pl.spec.chunk.chunk_points):
@@ -237,15 +255,21 @@ class SampledKMeans:
     mesh:        optional device mesh; enables/steers shard_map mode
     buffer_size, decay: stream-engine knobs used by ``partial_fit`` (and by
                  ``fit`` under ``mode="stream"``)
+    logger:      a :class:`repro.telemetry.RunLogger` instance or registry
+                 name; overrides ``spec.execution.telemetry`` for every
+                 fit/partial_fit this estimator runs
     """
 
     def __init__(self, spec: ClusterSpec | int, *,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 buffer_size: int = 1024, decay: float = 0.97):
+                 buffer_size: int = 1024, decay: float = 0.97,
+                 logger: "RunLogger | str | None" = None):
         if isinstance(spec, int):
             spec = ClusterSpec.make(spec)
         self.spec = spec
         self.mesh = mesh
+        self.logger = get_run_logger(logger if logger is not None
+                                     else spec.execution.telemetry)
         self._stream_overrides = dict(buffer_size=buffer_size, decay=decay)
         self._clusterer = None      # lazy StreamingClusterer for partial_fit
         self._stream_state = None
@@ -257,7 +281,8 @@ class SampledKMeans:
     # -- planning ---------------------------------------------------------
     def plan(self, data_shape: Optional[tuple] = None, *,
              source: Optional[DataSource] = None) -> ExecutionPlan:
-        return plan(self.spec, data_shape, mesh=self.mesh, source=source)
+        return plan(self.spec, data_shape, mesh=self.mesh, source=source,
+                    logger=self.logger)
 
     @property
     def backend(self) -> LloydBackend:
@@ -316,7 +341,7 @@ class SampledKMeans:
         if self._clusterer is None:
             cfg = StreamConfig.from_spec(self.spec,
                                          **self._stream_overrides)
-            self._clusterer = StreamingClusterer(cfg)
+            self._clusterer = StreamingClusterer(cfg, logger=self.logger)
             self._stream_state = self._clusterer.init(
                 dim=chunk.shape[-1], key=key, dtype=chunk.dtype)
         self._stream_state = self._clusterer.update(self._stream_state,

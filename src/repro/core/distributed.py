@@ -142,6 +142,7 @@ def make_distributed_sampled_kmeans(
     backend: BackendSpec = None,
     init: str = "kmeans++",
     levels: tuple = None,
+    logger=None,
 ):
     """Build a jit-able ``fn(x, key) -> DistributedClusteringResult`` where
     ``x`` is (M, d) sharded along ``axis``.  This is deliverable (a)'s main
@@ -277,4 +278,31 @@ def make_distributed_sampled_kmeans(
         out_specs=DistributedClusteringResult(P(), P(axis), P(axis), P()),
         check_vma=False,
     )
-    return jax.jit(mapped)
+    fitted = jax.jit(mapped)
+
+    # telemetry (logger= or spec.execution.telemetry): the shard_map body
+    # cannot log host-side, so the compiled fit is timed from out here —
+    # one "fit_shard_map" timer per call, with the mesh/merge accounting.
+    # Telemetry-only sync; the NULL path returns the bare jitted fn.
+    from repro.telemetry import NULL, get_run_logger
+    log = get_run_logger(
+        logger if logger is not None
+        else (spec.execution.telemetry if spec is not None else None))
+    if log is NULL:
+        return fitted
+
+    n_dev = int(mesh.shape[axis])
+
+    def logged(x, key):
+        with log.timer("fit_shard_map", n=int(x.shape[0]), k=k,
+                       merge_path=merge, levels=len(levels),
+                       devices=n_dev):
+            res = fitted(x, key)
+            jax.block_until_ready(res.sse)
+        log.event("dist_fit", n=int(x.shape[0]), k=k, merge_path=merge,
+                  devices=n_dev,
+                  pool=int(res.local_centers.shape[0]),
+                  sse=float(res.sse))
+        return res
+
+    return logged

@@ -27,11 +27,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+
+_now = time.perf_counter
 
 from .backend import BackendSpec, get_backend
 from .kmeans import KMeansResult, kmeans
@@ -164,18 +167,34 @@ def reduce_pool(pool: Array, pool_w: Array, level: LevelSpec, key: Array,
 
 def fit_from_spec(x: Array, spec: ClusterSpec,
                   key: Optional[Array] = None, *,
-                  backend: BackendSpec = None) -> SampledClusteringResult:
+                  backend: BackendSpec = None,
+                  logger=None) -> SampledClusteringResult:
     """Run the full pipeline as declared by ``spec`` on one device:
     partition -> local k-means -> (optional extra reduce levels over the
     weighted center pool, ``spec.levels``) -> merge.  ``backend`` overrides
     ``spec.execution.backend`` when the caller (e.g. the planner) has
-    already resolved an instance."""
+    already resolved an instance; ``logger`` likewise overrides
+    ``spec.execution.telemetry`` (a resolved :class:`RunLogger`).
+
+    Telemetry is strictly host-side (timers around stage dispatch), so a
+    logged fit is bit-for-bit the unlogged fit.  When this function is
+    itself traced under ``jax.jit`` (the ``donate`` path, perf harnesses),
+    host timers would fire once at trace time and mean nothing — the
+    logger is disabled in that case and the *caller* times the compiled
+    call instead."""
+    from repro.telemetry import NULL, get_run_logger
+    if isinstance(x, jax.core.Tracer):
+        log = NULL    # tracing: host-side timers would measure the trace
+    else:
+        log = get_run_logger(logger if logger is not None
+                             else spec.execution.telemetry)
     if key is None:
         key = jax.random.PRNGKey(0)
     key_local, key_global = jax.random.split(key)
     be = get_backend(backend if backend is not None
                      else spec.execution.backend)
 
+    t_start = _now()
     d = x.shape[-1]
     if spec.scale:
         lo = jnp.min(x, axis=0)
@@ -189,29 +208,42 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
     # resident fit is literally the one-chunk schedule, so the out-of-core
     # parity pin holds by construction (for every dtype: sharing the trace
     # sidesteps jit-vs-eager bf16 rounding differences)
-    local_centers, local_counts, n_dropped = _fold_scaled_chunk(
-        x, lo, span, key_local, lv=spec.level_schedule()[0], backend=be)
+    with log.timer("fold", rows=int(x.shape[0])):
+        local_centers, local_counts, n_dropped = _fold_scaled_chunk(
+            x, lo, span, key_local, lv=spec.level_schedule()[0], backend=be)
 
     # hierarchical reduce tree: recursively re-partition the weighted center
     # pool until it is small enough for the merge stage (spec.levels is ()
     # for the paper's flat two-level pipeline — the loop is a no-op there)
     for i, lvl in enumerate(spec.levels):
-        local_centers, local_counts, w_dropped = reduce_pool(
-            local_centers, local_counts, lvl,
-            jax.random.fold_in(key_local, 1 + i), backend=be)
+        with log.timer("reduce_level", level=i,
+                       pool_in=int(local_centers.shape[0])):
+            local_centers, local_counts, w_dropped = reduce_pool(
+                local_centers, local_counts, lvl,
+                jax.random.fold_in(key_local, 1 + i), backend=be)
         # unequal-scheme levels can clamp overflow ENTRIES; each carries
         # the mass of the original points it represents — keep the loss
         # visible in the same n_dropped channel as the base partition
         n_dropped = n_dropped + jnp.round(w_dropped).astype(jnp.int32)
 
-    merged = merge_pool(local_centers, local_counts, spec.merge, key_global,
-                        backend=be)
+    with log.timer("merge", pool=int(local_centers.shape[0]),
+                   k=spec.merge.k):
+        merged = merge_pool(local_centers, local_counts, spec.merge,
+                            key_global, backend=be)
 
     centers = merged.centers
     if spec.scale:
         centers = unscale(centers, params)
         local_centers = unscale(local_centers, params)
-    total_sse = sse_fn(x, centers)
+    with log.timer("sse"):
+        total_sse = sse_fn(x, centers)
+    if log is not NULL:
+        jax.block_until_ready(total_sse)   # telemetry-only sync: wall
+        #                                    times mean "result ready"
+        wall = _now() - t_start
+        log.event("fit_from_spec", n=int(x.shape[0]), d=d, k=spec.merge.k,
+                  levels=spec.n_levels, backend=be.name, wall_s=wall,
+                  points_per_sec=int(x.shape[0]) / max(wall, 1e-9))
     return SampledClusteringResult(centers, total_sse, local_centers,
                                    local_counts, n_dropped)
 
@@ -275,7 +307,7 @@ def _fold_scaled_chunk(chunk: Array, lo: Array, span: Array, key: Array, *,
 
 
 def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
-                backend: BackendSpec = None
+                backend: BackendSpec = None, logger=None
                 ) -> tuple[SampledClusteringResult, ChunkStats]:
     """Run the full spec-declared pipeline **out of core** over a
     :class:`repro.data.source.DataSource` (anything array-like auto-wraps):
@@ -300,8 +332,18 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
     :func:`fit_from_spec` bit-for-bit under the same key (chunk 0 reuses
     the base local key; the scale, fold, level, merge, and SSE stages are
     the same functions).  Returns ``(result, ChunkStats)``.
+
+    With a logger (``logger=`` or ``spec.execution.telemetry``) the run
+    emits per-stage timers, a per-chunk ``fold_rate`` series
+    (median-window points/sec — one slow tick, e.g. the compile on chunk
+    0, does not read as the steady-state rate), and a final summary event
+    carrying the :class:`ChunkStats` accounting plus peak RSS.  All of it
+    host-side: the logged fit is bit-for-bit the unlogged fit.
     """
     from repro.data.source import as_source, prefetch_to_device
+    from repro.telemetry import NULL, get_run_logger, peak_rss_mb
+    log = get_run_logger(logger if logger is not None
+                         else spec.execution.telemetry)
     source = as_source(source)
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -312,33 +354,40 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
     depth = spec.chunk.prefetch
     base = spec.level_schedule()[0]
 
+    t_start = _now()
     passes = 1
     lo = span = None
     if spec.scale:
-        lo, span = scale_pass(source, cp, prefetch=depth)
+        with log.timer("scale_pass"):
+            lo, span = scale_pass(source, cp, prefetch=depth)
         passes += 1
 
     pools, pool_ws = [], []
     n_dropped = jnp.asarray(0, jnp.int32)
     n_points = n_chunks = max_chunk = 0
-    for i, chunk in enumerate(prefetch_to_device(source.chunks(cp), depth)):
-        m, d = chunk.shape
-        if m == 0:
-            continue
-        if lo is None:  # scale off: identity parameters, same code path
-            lo = jnp.zeros((d,), chunk.dtype)
-            span = jnp.ones((d,), chunk.dtype)
-        lv = (base if m >= base.n_sub
-              else dataclasses.replace(base, n_sub=max(1, m)))
-        ck = (key_local if i == 0
-              else jax.random.fold_in(key_local, _CHUNK_KEY_OFFSET + i))
-        c, w, nd = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv, backend=be)
-        pools.append(c)
-        pool_ws.append(w)
-        n_dropped = n_dropped + nd
-        n_points += m
-        n_chunks += 1
-        max_chunk = max(max_chunk, m)
+    fold_rate = log.rate("fold_rate", units="points")
+    with log.timer("fold"):
+        for i, chunk in enumerate(prefetch_to_device(source.chunks(cp),
+                                                     depth)):
+            m, d = chunk.shape
+            if m == 0:
+                continue
+            if lo is None:  # scale off: identity parameters, same code path
+                lo = jnp.zeros((d,), chunk.dtype)
+                span = jnp.ones((d,), chunk.dtype)
+            lv = (base if m >= base.n_sub
+                  else dataclasses.replace(base, n_sub=max(1, m)))
+            ck = (key_local if i == 0
+                  else jax.random.fold_in(key_local, _CHUNK_KEY_OFFSET + i))
+            c, w, nd = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv,
+                                          backend=be)
+            pools.append(c)
+            pool_ws.append(w)
+            n_dropped = n_dropped + nd
+            n_points += m
+            n_chunks += 1
+            max_chunk = max(max_chunk, m)
+            fold_rate.tick(m, chunk=i, rows=m)
     if n_chunks == 0:
         raise ValueError("fit_chunked: the source yielded no points")
 
@@ -347,12 +396,14 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
               else jnp.concatenate(pool_ws, axis=0))
 
     for j, lvl in enumerate(spec.levels):
-        pool, pool_w, w_dropped = reduce_pool(
-            pool, pool_w, lvl, jax.random.fold_in(key_local, 1 + j),
-            backend=be)
+        with log.timer("reduce_level", level=j, pool_in=int(pool.shape[0])):
+            pool, pool_w, w_dropped = reduce_pool(
+                pool, pool_w, lvl, jax.random.fold_in(key_local, 1 + j),
+                backend=be)
         n_dropped = n_dropped + jnp.round(w_dropped).astype(jnp.int32)
 
-    merged = merge_pool(pool, pool_w, spec.merge, key_global, backend=be)
+    with log.timer("merge", pool=int(pool.shape[0]), k=spec.merge.k):
+        merged = merge_pool(pool, pool_w, spec.merge, key_global, backend=be)
 
     centers, local_centers = merged.centers, pool
     if spec.scale:
@@ -360,10 +411,12 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
         local_centers = unscale(local_centers, (lo, span))
 
     if spec.chunk.sse == "exact":
-        total_sse = sse_pass(source, centers, cp, prefetch=depth)
+        with log.timer("sse_pass"):
+            total_sse = sse_pass(source, centers, cp, prefetch=depth)
         passes += 1
     else:  # "pool": weighted SSE of the representatives, no extra pass
-        total_sse = sse_fn(local_centers, centers, weights=pool_w)
+        with log.timer("sse_pool"):
+            total_sse = sse_fn(local_centers, centers, weights=pool_w)
 
     result = SampledClusteringResult(centers, total_sse, local_centers,
                                      pool_w, n_dropped)
@@ -371,6 +424,14 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
                        max_chunk_points=max_chunk,
                        pool_size=int(pool.shape[0]), prefetch=depth,
                        passes=passes)
+    if log is not NULL:
+        jax.block_until_ready(total_sse)   # telemetry-only sync: wall
+        #                                    times mean "result ready"
+        wall = _now() - t_start
+        log.event("fit_chunked", k=spec.merge.k, levels=spec.n_levels,
+                  backend=be.name, wall_s=wall,
+                  points_per_sec=n_points / max(wall, 1e-9),
+                  peak_rss_mb=peak_rss_mb(), **stats._asdict())
     return result, stats
 
 

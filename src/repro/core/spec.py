@@ -147,13 +147,18 @@ class ExecutionSpec:
     ``merge_path`` picks the shard_map merge strategy: ``"replicated"``
     (all_gather the pool, merge redundantly — paper-faithful) or
     ``"distributed"`` (the pool stays sharded; only the k global centers
-    cross devices per Lloyd round).
+    cross devices per Lloyd round).  ``telemetry`` names a
+    :func:`repro.telemetry.get_run_logger` entry (``"off"``, ``"memory"``,
+    ``"jsonl[:path]"``, or user-registered) — resolved at plan time, like
+    ``backend``, so the spec stays hashable and JSON-serializable while
+    every executor it drives emits structured run events.
     """
     backend: BackendSpec = "auto"
     mode: str = "auto"
     mesh_axis: str = "data"
     donate: bool = False
     merge_path: str = "replicated"
+    telemetry: str = "off"
 
     def __post_init__(self):
         if self.mode not in _MODES:
@@ -277,6 +282,21 @@ class ClusterSpec:
             raise ValueError(
                 f"ClusterSpec.from_dict: unknown top-level keys {sorted(d)}")
         return cls(scale=scale, levels=tuple(levels), **kwargs)
+
+    def stable_hash(self) -> str:
+        """Short content hash of the *algorithmic* sections (partition,
+        local, levels, merge, chunk, scale) — the execution section
+        (mode/backend/telemetry/...) is excluded because it changes *where*
+        the job runs, not *what* it computes.  This is the first component
+        of the perf-trajectory key ``(spec_hash, mode, backend)``
+        (``benchmarks/trajectory.py``): same algorithm on two engines lands
+        on two series that share a hash."""
+        import hashlib
+        import json as _json
+        d = self.to_dict()
+        d.pop("execution", None)
+        blob = _json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
 
     # -- convenience ------------------------------------------------------
     @property

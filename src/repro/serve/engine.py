@@ -40,11 +40,16 @@ class ServeConfig:
                                     # whose merge/execution sections supply
                                     # the refresh iters + backend (overrides
                                     # recompress_iters / kmeans_backend)
+    telemetry: str = "off"          # RunLogger name (repro.telemetry):
+                                    # tokens/sec per generate + recompress
+                                    # timers
 
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, shape: ShapeConfig,
-                 params, scfg: Optional[ServeConfig] = None):
+                 params, scfg: Optional[ServeConfig] = None, *,
+                 logger=None):
+        from repro.telemetry import get_run_logger
         self.cfg, self.shape = cfg, shape
         self.model = build_model(cfg)
         self.params = params
@@ -72,6 +77,11 @@ class ServeEngine:
             refresh_layer_cache, iters=refresh_iters,
             backend=refresh_backend))
         self._n_generate_calls = 0
+        self.logger = get_run_logger(
+            logger if logger is not None else (scfg or ServeConfig()
+                                               ).telemetry)
+        self._tok_rate = self.logger.rate("decode_rate", units="tokens",
+                                          window=16)
 
     def _refresh_tree(self, c, last):
         """Recurse through a cache dict refreshing every clustered sub-cache
@@ -91,7 +101,12 @@ class ServeEngine:
         if (self.kind != "clustered" or every <= 0 or pos == 0
                 or pos % every != 0):
             return caches
-        return self._refresh_tree(caches, jnp.asarray(pos - 1, jnp.int32))
+        with self.logger.timer("recompress", pos=pos):
+            out = self._refresh_tree(caches, jnp.asarray(pos - 1, jnp.int32))
+            from repro.telemetry import NULL
+            if self.logger is not NULL:
+                jax.block_until_ready(out)
+        return out
 
     # -- prefill -----------------------------------------------------------
     def prefill(self, tokens: jax.Array):
@@ -119,9 +134,12 @@ class ServeEngine:
             self._n_generate_calls += 1
             key = jax.random.fold_in(jax.random.PRNGKey(0),
                                      self._n_generate_calls)
+        from repro.telemetry import NULL
+        import time as _time
         caches, logits, pos = self.prefill(tokens)
         out = []
         B = tokens.shape[0]
+        t_loop = _time.perf_counter()
         for t in range(max_tokens):
             if self.scfg.temperature > 0:
                 key, sub = jax.random.split(key)
@@ -136,6 +154,11 @@ class ServeEngine:
                                           jnp.asarray(pos, jnp.int32))
             pos += 1
             caches = self._maybe_recompress(caches, pos)
+            if self.logger is not NULL:
+                jax.block_until_ready(logits)
+                now = _time.perf_counter()
+                self._tok_rate.tick(B, dur=now - t_loop, pos=pos)
+                t_loop = now
         return np.concatenate(out, axis=1)
 
 

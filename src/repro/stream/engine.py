@@ -30,6 +30,7 @@ the existing ``data`` axis (see :mod:`repro.core.distributed`).
 from __future__ import annotations
 
 import dataclasses
+import time as _time
 import warnings
 from typing import NamedTuple, Optional
 
@@ -71,6 +72,8 @@ class StreamConfig:
     reseed_threshold: float = 1e-6 # coreset support below this = dead center
     init_mode: str = "kmeans++"    # local-stage init
     backend: str = "auto"          # LloydBackend name (repro.core.backend)
+    telemetry: str = "off"         # RunLogger name (repro.telemetry) —
+    #                                per-tick points/sec with median windows
     levels: tuple = ()             # tuple[LevelSpec, ...]: extra reduce
     #                                levels compressing the coreset pool
     #                                before each warm-started merge
@@ -92,6 +95,7 @@ class StreamConfig:
             merge_iters=spec.merge.iters,
             init_mode=spec.local.init,
             backend=spec.execution.backend,
+            telemetry=spec.execution.telemetry,
             levels=spec.levels,
         )
         base.update(overrides)
@@ -210,10 +214,14 @@ class StreamingClusterer:
     """
 
     def __init__(self, cfg: StreamConfig | ClusterSpec, *,
-                 backend: BackendSpec = None, jit: bool = True):
+                 backend: BackendSpec = None, jit: bool = True,
+                 logger=None):
+        from repro.telemetry import NULL, get_run_logger
         if isinstance(cfg, ClusterSpec):
             cfg = StreamConfig.from_spec(cfg)
         self.cfg = cfg
+        self.logger = get_run_logger(logger if logger is not None
+                                     else cfg.telemetry)
         if any(lvl.scheme == "unequal" for lvl in cfg.levels):
             # the stream state has no n_dropped channel: an unequal-scheme
             # level's capacity clamp would shave merge-input mass silently
@@ -229,6 +237,24 @@ class StreamingClusterer:
         wrap = jax.jit if jit else (lambda f: f)
         self.update = wrap(self._update)
         self.query = wrap(self._query)
+        if self.logger is not NULL:
+            # host-side tick meter around the (possibly jitted) update:
+            # per-tick points/sec as a median window (one compile or
+            # prefetch stall does not read as the steady-state rate).
+            # Telemetry-only sync — values are untouched.
+            raw_update = self.update
+            meter = self.logger.rate("stream_tick", units="points")
+
+            def logged_update(state, chunk):
+                t0 = _time.perf_counter()
+                new_state = raw_update(state, chunk)
+                jax.block_until_ready(new_state.centers)
+                meter.tick(int(chunk.shape[0]),
+                           dur=_time.perf_counter() - t0,
+                           step=int(new_state.step))
+                return new_state
+
+            self.update = logged_update
 
     # -- state ------------------------------------------------------------
     def init(self, dim: int, key: Optional[Array] = None,

@@ -398,8 +398,11 @@ def test_transform_score_blocked_identical(dataset):
     np.testing.assert_array_equal(
         np.asarray(est.transform(x, block=10 ** 9)),
         np.asarray(est.transform(x, block=300)))
-    assert (float(est.score(x, block=10 ** 9))
-            == float(est.score(x, block=300)))
+    # different block sizes are different XLA programs — per-row values
+    # match but the final reduction may fuse differently, so the scalar
+    # score gets a tight tolerance instead of exact equality
+    np.testing.assert_allclose(float(est.score(x, block=10 ** 9)),
+                               float(est.score(x, block=300)), rtol=1e-6)
 
 
 # ---------------------------------------------------------------------------

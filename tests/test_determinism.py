@@ -1,0 +1,66 @@
+"""Property-based determinism sweep over random ``(ClusterSpec, seed)``.
+
+The batch pipeline's reproducibility contract: the same spec, data, and PRNG
+key must give *bit-identical* centers every time — across repeated fits of
+one estimator, across fresh estimators, and across the in-core vs
+single-chunk out-of-core executors (whose parity the chunked executor
+guarantees by construction).
+
+Runs through ``_hypothesis_compat``: with hypothesis installed these are
+real property tests; offline they degrade to a fixed deterministic batch of
+examples per property.  Shapes are drawn from small fixed menus so the
+sweep adds a bounded number of XLA compiles to the tier-1 loop.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.api import SampledKMeans
+from repro.core import fit_chunked, fit_from_spec
+from repro.core.spec import ChunkSpec, ClusterSpec, ExecutionSpec
+
+
+def _workload(n, k, dim, seed):
+    from repro.data.synthetic import blobs
+    pts, _, _ = blobs(n, n_clusters=k, dim=dim, seed=seed % 8)
+    return jnp.asarray(pts), jax.random.PRNGKey(seed)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.sampled_from([257, 512]),
+       k=st.integers(2, 5),
+       n_sub=st.sampled_from([2, 4, 8]),
+       compression=st.integers(2, 4),
+       seed=st.integers(0, 2 ** 16))
+def test_repeated_fits_bit_identical(n, k, n_sub, compression, seed):
+    spec = ClusterSpec.make(k, n_sub=n_sub, compression=compression)
+    x, key = _workload(n, k, 3, seed)
+    est = SampledKMeans(spec)
+    a = est.fit(x, key=key)
+    first = np.asarray(a.centers_).copy()
+    first_sse = float(a.sse_)
+    for est2 in (est, SampledKMeans(spec)):     # same and fresh estimator
+        b = est2.fit(x, key=key)
+        np.testing.assert_array_equal(first, np.asarray(b.centers_))
+        assert first_sse == float(b.sse_)
+
+
+@settings(max_examples=5, deadline=None)
+@given(n=st.sampled_from([300, 600]),
+       k=st.integers(2, 5),
+       n_sub=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2 ** 16))
+def test_single_chunk_chunked_matches_in_core(n, k, n_sub, seed):
+    """One-chunk ``mode="chunked"`` is the same trace as ``fit_from_spec``
+    — the executors must agree bit-for-bit, not just within tolerance."""
+    spec = ClusterSpec.make(k, n_sub=n_sub, compression=3)
+    x, key = _workload(n, k, 2, seed)
+    ref = fit_from_spec(x, spec, key)
+    cspec = spec.replace(execution=ExecutionSpec(mode="chunked"),
+                         chunk=ChunkSpec(chunk_points=n))
+    res, stats = fit_chunked(x, cspec, key)
+    assert stats.n_chunks == 1
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(res.centers))
+    assert float(ref.sse) == float(res.sse)

@@ -114,6 +114,25 @@ def test_serve_engine_sampling_fresh_key_per_call():
     np.testing.assert_array_equal(outa, outb)
 
 
+def test_serve_engine_telemetry_parity():
+    """decode_rate ticks + recompress timers appear when a logger is
+    attached, and the generated tokens are bit-for-bit the unlogged run."""
+    from repro.telemetry import RecordingLogger
+    cfg = get_config("internlm2-20b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    shape = ShapeConfig("s", 64, 2, "decode")
+    prompt = jnp.ones((2, 4), jnp.int32)
+    scfg = ServeConfig(max_tokens=6)
+    plain = ServeEngine(cfg, shape, params, scfg).generate(prompt)
+    rec = RecordingLogger()
+    logged = ServeEngine(cfg, shape, params, scfg,
+                         logger=rec).generate(prompt)
+    np.testing.assert_array_equal(plain, logged)
+    ticks = [e for e in rec.events if e["name"] == "decode_rate"]
+    assert len(ticks) == 6 and all(e["kind"] == "rate" for e in ticks)
+
+
 def test_ssm_decode_long_context_state_bounded():
     """xlstm decode cache size is independent of seq_len (O(1) state)."""
     cfg = get_config("xlstm-1.3b").reduced()

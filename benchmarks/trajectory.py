@@ -29,7 +29,7 @@ SCHEMA = 1
 # metrics worth tracking per bench kind; anything absent is simply omitted
 # from the point (partial artifacts yield partial points, not errors)
 _SPEC_METRICS = ("points_per_sec", "us_best", "sse", "rel_sse",
-                 "peak_rss_mb")
+                 "peak_rss_mb", "fold_scaling")
 
 
 class SkipArtifact(Exception):

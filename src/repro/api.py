@@ -23,7 +23,14 @@ Execution modes (``spec.execution.mode``):
                  ``mesh=`` to the estimator / planner
   ``stream``     the incremental coreset engine (`stream.engine`); ``fit``
                  feeds the data chunk-wise, ``partial_fit`` is one update
-  ``auto``       ``shard_map`` when a mesh is supplied, else ``single``
+  ``chunked``    the out-of-core executor (`core.pipeline.fit_chunked`) —
+                 the data arrives as a DataSource, chunk by chunk
+  ``chunked_dist``  out-of-core × multi-device
+                 (`core.distributed.fit_chunked_dist`): one source shard
+                 per mesh device, pools merged across the mesh
+  ``auto``       ``chunked_dist`` when a mesh AND a non-resident source are
+                 supplied, ``shard_map`` for a mesh with resident data,
+                 ``chunked`` for a non-resident source, else ``single``
 
 ``fit`` under ``single`` reproduces ``sampled_kmeans(x, spec=spec)``
 bit-for-bit under the same PRNG key: both run the identical
@@ -114,10 +121,13 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
     schedule = spec.level_schedule()
 
     mode = spec.execution.mode
+    non_resident = source is not None and not isinstance(source, ArraySource)
     if mode == "auto":
-        if mesh is not None:
+        if mesh is not None and non_resident:
+            mode = "chunked_dist"   # both axes: shard the source over the mesh
+        elif mesh is not None:
             mode = "shard_map"
-        elif source is not None and not isinstance(source, ArraySource):
+        elif non_resident:
             mode = "chunked"
         else:
             mode = "single"
@@ -155,6 +165,34 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
                 raise ValueError(
                     f"plan: {data_shape[0]} rows do not divide over "
                     f"{n_dev} devices along {axis!r}")
+    if mode == "chunked_dist":
+        if mesh is None:
+            raise ValueError("plan: mode='chunked_dist' needs a mesh= "
+                             "(see repro.compat.make_mesh)")
+        axis = spec.execution.mesh_axis
+        if tuple(mesh.axis_names) != (axis,):
+            raise ValueError(
+                f"plan: mode='chunked_dist' needs a 1-D mesh over the "
+                f"{axis!r} axis (spec.execution.mesh_axis), got axes "
+                f"{mesh.axis_names}")
+        if data_shape is not None and data_shape[0]:
+            n = int(data_shape[0])
+            n_dev = int(mesh.shape[axis])
+            n_chunks = -(-n // spec.chunk.chunk_points)
+            if n_chunks < n_dev:
+                raise ValueError(
+                    f"plan: {n} rows make only {n_chunks} chunks of "
+                    f"{spec.chunk.chunk_points} — not enough to feed "
+                    f"{n_dev} devices one shard each (shrink chunk_points "
+                    f"or the mesh)")
+            sched = spec.chunked_dist_pool_schedule(n, n_dev)
+            if sched[-1] < spec.merge.k:
+                raise ValueError(
+                    f"plan: the sharded chunk schedule leaves only "
+                    f"{sched[-1]} representatives for a k={spec.merge.k} "
+                    f"merge — use larger chunks, drop a level, or lower "
+                    f"its compression (per-shard + global schedule: "
+                    f"{sched})")
     return ExecutionPlan(spec=spec, mode=mode, backend=backend, mesh=mesh,
                          data_shape=data_shape, schedule=schedule,
                          logger=run_logger)
@@ -167,18 +205,27 @@ def execute(pl: ExecutionPlan, x, key: Optional[Array] = None, *,
     one-shot fits over a resident array (an ArraySource unwraps; other
     sources are rejected — they exist precisely because the data does not
     fit); chunked mode folds the source chunk-by-chunk
-    (:func:`repro.core.pipeline.fit_chunked`); stream mode folds ``x``
-    through the incremental engine — as one chunk for arrays, chunk-wise
-    for sources (use :class:`SampledKMeans.partial_fit` for live feeds).
+    (:func:`repro.core.pipeline.fit_chunked`); chunked_dist splits the
+    source into one shard per mesh device
+    (:func:`repro.core.distributed.fit_chunked_dist`); stream mode folds
+    ``x`` through the incremental engine — as one chunk for arrays,
+    chunk-wise for sources (use :class:`SampledKMeans.partial_fit` for
+    live feeds).
 
     Returns a :class:`SampledClusteringResult`; with ``return_stats=True``
-    returns ``(result, ChunkStats | None)`` — the out-of-core accounting
-    for chunked mode, ``None`` for the resident modes."""
+    returns ``(result, ChunkStats | ChunkDistStats | None)`` — the
+    out-of-core accounting for the chunked modes, ``None`` for the
+    resident modes."""
     if key is None:
         key = jax.random.PRNGKey(0)
     if pl.mode == "chunked":
         res, stats = fit_chunked(as_source(x), pl.spec, key,
                                  backend=pl.backend, logger=pl.logger)
+        return (res, stats) if return_stats else res
+    if pl.mode == "chunked_dist":
+        from repro.core.distributed import fit_chunked_dist
+        res, stats = fit_chunked_dist(as_source(x), pl.spec, pl.mesh, key,
+                                      backend=pl.backend, logger=pl.logger)
         return (res, stats) if return_stats else res
     if return_stats:
         return execute(pl, x, key), None
@@ -292,7 +339,8 @@ class SampledKMeans:
     def fit(self, x, key: Optional[Array] = None) -> "SampledKMeans":
         """One-shot fit of ``x``: a resident ``(n, d)`` array (any mode) or
         a :class:`~repro.data.source.DataSource` (out-of-core; ``auto``
-        resolves non-resident sources to ``chunked``).  Always starts
+        resolves non-resident sources to ``chunked``, or ``chunked_dist``
+        when the estimator also has a ``mesh``).  Always starts
         fresh: any live ``partial_fit`` stream state is discarded, so a
         later ``partial_fit`` begins a new stream."""
         src = x if isinstance(x, DataSource) else None

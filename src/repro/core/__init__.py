@@ -13,10 +13,15 @@ Public API:
   fit_from_spec                   — spec-driven single-device pipeline
   fit_chunked, ChunkStats         — out-of-core executor over a DataSource
                                     (repro.data.source; mode="chunked")
+  fit_chunked_dist, ChunkDistStats — sharded out-of-core executor: one
+                                    source shard per mesh device
+                                    (mode="chunked_dist")
   chunk_fold / merge_pool / scale_pass / sse_pass — the factored stage
                                     functions every executor composes
   sampled_kmeans, standard_kmeans — thin flat-kwarg adapters over the above
   make_distributed_sampled_kmeans — pod-scale shard_map version
+  merge_pool_distributed          — sharded-pool merge (only k centers
+                                    cross the mesh per Lloyd round)
   sse, relative_error, clustering_accuracy — metrics
 
 The estimator facade (`SampledKMeans`) and the plan/execute split live one
@@ -32,22 +37,24 @@ from .metrics import (clustering_accuracy, map_row_blocks, min_sqdist,
                       relative_error, sse)
 from .pipeline import (ChunkStats, SampledClusteringResult, chunk_fold,
                        fit_chunked, fit_from_spec, local_stage, merge_pool,
-                       reduce_pool, sampled_kmeans, scale_pass, sse_pass,
-                       standard_kmeans)
+                       minmax_pass, reduce_pool, sampled_kmeans, scale_pass,
+                       sse_pass, standard_kmeans)
 from .spec import (ChunkSpec, ClusterSpec, ExecutionSpec, LevelSpec,
                    LocalSpec, MergeSpec, PartitionSpec)
 from .subcluster import (Partition, available_partitioners, equal_partition,
                          feature_scale, gather_partitions, get_partitioner,
                          register_partitioner, unequal_landmarks,
                          unequal_partition, unscale)
-from .distributed import (DistributedClusteringResult,
-                          make_distributed_sampled_kmeans)
+from .distributed import (ChunkDistStats, DistributedClusteringResult,
+                          fit_chunked_dist, make_distributed_sampled_kmeans,
+                          merge_pool_distributed)
 
 __all__ = [
     "ClusterSpec", "PartitionSpec", "LocalSpec", "MergeSpec",
     "ExecutionSpec", "LevelSpec", "ChunkSpec",
     "ChunkStats", "chunk_fold", "merge_pool", "fit_chunked", "scale_pass",
-    "sse_pass", "min_sqdist", "map_row_blocks",
+    "minmax_pass", "sse_pass", "min_sqdist", "map_row_blocks",
+    "ChunkDistStats", "fit_chunked_dist", "merge_pool_distributed",
     "KMeansResult", "kmeans", "kmeans_lloyd_step", "assign_jnp",
     "kmeans_pp_init", "kmeans_parallel_init", "landmark_init", "random_init",
     "pairwise_sqdist", "update_centers",

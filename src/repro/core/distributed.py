@@ -26,21 +26,30 @@ last (smallest) pool instead of all ``P_total * k_local`` representatives.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import time
 import warnings
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro import compat
 
 from .backend import BackendSpec, LloydBackend, get_backend
 from .kmeans import kmeans, pairwise_sqdist
-from .pipeline import reduce_pool
+from .pipeline import (SampledClusteringResult, _CHUNK_KEY_OFFSET,
+                       _SHARD_KEY_OFFSET, _PoolAccumulator,
+                       _fold_scaled_chunk, merge_pool, minmax_pass,
+                       reduce_pool, sse_pass)
+from .metrics import sse as sse_fn
 from .spec import ClusterSpec
 from .subcluster import gather_partitions, get_partitioner, unscale
+
+_now = time.perf_counter
 
 Array = jax.Array
 
@@ -306,3 +315,323 @@ def make_distributed_sampled_kmeans(
         return res
 
     return logged
+
+
+# ---------------------------------------------------------------------------
+# The sharded out-of-core executor (mode="chunked_dist"):
+# out-of-core × multi-device fused
+# ---------------------------------------------------------------------------
+
+class ChunkDistStats(NamedTuple):
+    """Accounting from one :func:`fit_chunked_dist` run — the sharded
+    counterpart of :class:`repro.core.pipeline.ChunkStats`, with per-device
+    breakdowns so the acceptance tests can prove both that the dataset
+    never sat in one place AND that every device pulled its own share."""
+    n_points: int            # total rows folded across all shards
+    n_chunks: int            # chunks consumed across all shards
+    max_chunk_points: int    # largest single resident chunk (rows)
+    pool_size: int           # concatenated pool rows the merge stage saw
+    prefetch: int            # per-device chunks in flight (host→device)
+    passes: int              # data passes: fold (+ scale) (+ exact SSE)
+    n_devices: int           # mesh devices = source shards
+    per_device_points: tuple  # rows folded by each device's shard
+    per_device_chunks: tuple  # chunks consumed by each device's shard
+    peak_pool_rows: int      # most pool rows alive on any ONE device
+
+
+def merge_pool_distributed(pools, pool_ws, spec: ClusterSpec,
+                           mesh: jax.sharding.Mesh, key: Array, *,
+                           backend: BackendSpec = None) -> Array:
+    """Merge per-device weighted center pools with the pool left sharded:
+    each device keeps its own pool rows and only the ``k`` global centers
+    cross the mesh per Lloyd round (:func:`_distributed_merge` — the
+    ``merge_path="distributed"`` strategy of the resident shard_map
+    executor, reused verbatim).
+
+    ``pools``/``pool_ws`` are host-side per-device ``(p_i, d)`` /
+    ``(p_i,)`` arrays in mesh-device order.  Ragged pools (a short tail
+    shard compresses to fewer rows) are padded to the widest with
+    zero-weight rows — dead slots carry no weight into the greedy
+    candidate picks or the Lloyd rounds.  (When a device's pool exceeds
+    the candidate budget ``max(2k, 8)``, the strided candidate subsample
+    sees the padded layout, so the padded merge is deterministic given
+    the pool shapes rather than literally identical to an unpadded one.)
+    Returns the replicated ``(k, d)`` centers (in whatever space the
+    pools are in — the caller unscales)."""
+    be = get_backend(backend if backend is not None
+                     else spec.execution.backend)
+    axis = spec.execution.mesh_axis
+    n_dev = int(np.prod(mesh.devices.shape))
+    if len(pools) != n_dev:
+        raise ValueError(
+            f"merge_pool_distributed: {len(pools)} pools for a "
+            f"{n_dev}-device mesh")
+    d = int(pools[0].shape[-1])
+    p_max = max(int(p.shape[0]) for p in pools)
+    padded_c, padded_w = [], []
+    for c, w in zip(pools, pool_ws):
+        c, w = np.asarray(c), np.asarray(w)
+        pad = p_max - c.shape[0]
+        if pad:
+            c = np.concatenate([c, np.zeros((pad, d), c.dtype)], axis=0)
+            w = np.concatenate([w, np.zeros((pad,), w.dtype)], axis=0)
+        padded_c.append(c)
+        padded_w.append(w)
+    all_c = np.concatenate(padded_c, axis=0)
+    all_w = np.concatenate(padded_w, axis=0)
+    merge_w = (all_w if spec.merge.weighted
+               else (all_w > 0).astype(all_c.dtype))
+
+    sharding = jax.sharding.NamedSharding(mesh, P(axis))
+    dc = jax.device_put(all_c, sharding)
+    dw = jax.device_put(merge_w, sharding)
+    k, iters = spec.merge.k, spec.merge.iters
+    body = compat.shard_map(
+        lambda lc, lw, kk: _distributed_merge(lc, lw, k, iters, kk,
+                                              axis, be),
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return jax.jit(body)(dc, dw, key)
+
+
+def fit_chunked_dist(source, spec: ClusterSpec, mesh: jax.sharding.Mesh,
+                     key: Optional[Array] = None, *,
+                     backend: BackendSpec = None, logger=None
+                     ) -> tuple[SampledClusteringResult, ChunkDistStats]:
+    """Run the spec-declared pipeline **out of core and multi-device**
+    (``mode="chunked_dist"``): the source splits into one
+    ``DataSource.shard(i, n)`` per mesh device, each device folds its own
+    shard's chunks through the jitted per-chunk stage with
+    ``prefetch_to_device`` pinning buffers to that device, reduces its pool
+    through the collective-free ``spec.levels`` locally, and only the final
+    per-device pools cross the mesh for the global merge — one collective
+    round-trip per fit (``merge_path="distributed"``; the ``"replicated"``
+    path gathers the pools on the host and merges eagerly, which is what
+    keeps the 1-device run bit-for-bit :func:`fit_chunked`).
+
+    Chunk dispatch round-robins across the devices, so while device ``i``'s
+    jitted fold executes, the host is already handing device ``i+1`` its
+    next chunk — the async-dispatch pipeline is what buys the fold-rate
+    scaling.  All cross-device combination (min/max scale partials,
+    dropped counts, SSE partials) happens on the host with exact or
+    order-fixed arithmetic.
+
+    PRNG streams: shard 0 draws exactly :func:`fit_chunked`'s streams
+    (chunk 0 = ``key_local`` verbatim, chunk ``j`` =
+    ``fold_in(key_local, _CHUNK_KEY_OFFSET + j)``, level ``j`` =
+    ``fold_in(key_local, 1 + j)``), which makes the 1-device/1-shard
+    parity pin hold by construction; shard ``i > 0`` folds per-chunk keys
+    at ``(i + 1) * _CHUNK_KEY_OFFSET + j`` and derives level/flush streams
+    from ``fold_in(key_local, _SHARD_KEY_OFFSET + i)`` — all streams
+    disjoint for any shard with fewer than ``_CHUNK_KEY_OFFSET`` chunks.
+    The merge key is the same ``key_global`` half :func:`fit_chunked`
+    uses, so the distributed merge agrees with
+    ``merge_pool_distributed`` on the same pools under the same key.
+
+    Empty shards (fewer chunks than devices) are tolerated at runtime —
+    they simply contribute nothing; ``plan()`` rejects the configurations
+    where that is knowable in advance.  Returns
+    ``(SampledClusteringResult, ChunkDistStats)``.
+    """
+    from repro.data.source import as_source, prefetch_to_device
+    from repro.telemetry import NULL, get_run_logger, peak_rss_mb
+    log = get_run_logger(logger if logger is not None
+                         else spec.execution.telemetry)
+    source = as_source(source)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    key_local, key_global = jax.random.split(key)
+    be = get_backend(backend if backend is not None
+                     else spec.execution.backend)
+    axis = spec.execution.mesh_axis
+    if tuple(mesh.axis_names) != (axis,):
+        raise ValueError(
+            f"fit_chunked_dist: needs a 1-D mesh over axis {axis!r} "
+            f"(spec.execution.mesh_axis), got axes {mesh.axis_names}")
+    devs = list(mesh.devices.flat)
+    n_dev = len(devs)
+    shards = [source.shard(i, n_dev) for i in range(n_dev)]
+    shard_keys = [key_local if i == 0
+                  else jax.random.fold_in(key_local, _SHARD_KEY_OFFSET + i)
+                  for i in range(n_dev)]
+    cp = spec.chunk.chunk_points
+    depth = spec.chunk.prefetch
+    base = spec.level_schedule()[0]
+
+    t_start = _now()
+    passes = 1
+    lo_np = span_np = None
+    if spec.scale:
+        # per-shard running min/max, combined on the host: min/max are
+        # exact and order-independent, so this is bitwise the single-pass
+        # answer no matter how the rows were sharded
+        with log.timer("scale_pass", devices=n_dev):
+            lo_parts, hi_parts = [], []
+            for i, shard in enumerate(shards):
+                slo, shi = minmax_pass(shard, cp, prefetch=depth,
+                                       device=devs[i])
+                if slo is not None:
+                    lo_parts.append(np.asarray(slo))
+                    hi_parts.append(np.asarray(shi))
+            if not lo_parts:
+                raise ValueError(
+                    "fit_chunked_dist: the source yielded no points")
+            lo_np = functools.reduce(np.minimum, lo_parts)
+            hi_np = functools.reduce(np.maximum, hi_parts)
+            span_np = np.maximum(hi_np - lo_np, np.asarray(1e-9, lo_np.dtype))
+        passes += 1
+        log.event("pass_rss", stage="scale", peak_rss_mb=peak_rss_mb())
+
+    # per-device fold state: scale params pinned to each device once,
+    # bounded pool accumulators, host-int counters (never cross-device adds)
+    lo_d = [None] * n_dev
+    span_d = [None] * n_dev
+    if lo_np is not None:
+        lo_d = [jax.device_put(lo_np, dv) for dv in devs]
+        span_d = [jax.device_put(span_np, dv) for dv in devs]
+    accs = [_PoolAccumulator(spec.levels, key_local, shard=i, backend=be,
+                             log=(log if log is not NULL else None))
+            for i in range(n_dev)]
+    dropped = [None] * n_dev
+    dev_points = [0] * n_dev
+    dev_chunks = [0] * n_dev
+    max_chunk = 0
+    fold_rate = log.rate("fold_rate", units="points")
+    with log.timer("fold", devices=n_dev):
+        its = [iter(enumerate(prefetch_to_device(
+                   shards[i].chunks(cp), depth, device=devs[i])))
+               for i in range(n_dev)]
+        live = set(range(n_dev))
+        while live:
+            # round-robin: dispatch one chunk per device per sweep; the
+            # jitted fold call returns before the device finishes, so
+            # device i computes while i+1's chunk is being dispatched
+            for i in sorted(live):
+                try:
+                    j, chunk = next(its[i])
+                except StopIteration:
+                    live.discard(i)
+                    continue
+                m, d = chunk.shape
+                if m == 0:
+                    continue
+                if lo_d[i] is None:  # scale off: identity params, same path
+                    lo_d[i] = jnp.zeros((d,), chunk.dtype)
+                    span_d[i] = jnp.ones((d,), chunk.dtype)
+                lv = (base if m >= base.n_sub
+                      else dataclasses.replace(base, n_sub=max(1, m)))
+                ck = (key_local if (i == 0 and j == 0)
+                      else jax.random.fold_in(
+                          key_local, (i + 1) * _CHUNK_KEY_OFFSET + j))
+                c, w, nd = _fold_scaled_chunk(chunk, lo_d[i], span_d[i], ck,
+                                              lv=lv, backend=be)
+                accs[i].add(c, w)
+                dropped[i] = nd if dropped[i] is None else dropped[i] + nd
+                dev_points[i] += m
+                dev_chunks[i] += 1
+                max_chunk = max(max_chunk, m)
+                fold_rate.tick(m, device=i, chunk=j, rows=m)
+    n_points, n_chunks = sum(dev_points), sum(dev_chunks)
+    if n_chunks == 0:
+        raise ValueError("fit_chunked_dist: the source yielded no points")
+    log.event("pass_rss", stage="fold", peak_rss_mb=peak_rss_mb())
+
+    # per-device collective-free reduce levels (shard 0 on fit_chunked's
+    # key stream), then only the final pools leave their devices
+    pools, pool_ws = [], []
+    n_dropped_total = 0
+    for i in range(n_dev):
+        if dev_chunks[i] == 0:
+            continue  # empty shard: nothing to reduce, nothing to merge
+        pool_i, w_i = accs[i].finalize()
+        if accs[i].w_dropped is not None:
+            dropped[i] = (dropped[i]
+                          + jnp.round(accs[i].w_dropped).astype(jnp.int32))
+        for jl, lvl in enumerate(spec.levels):
+            with log.timer("reduce_level", device=i, level=jl,
+                           pool_in=int(pool_i.shape[0])):
+                pool_i, w_i, wd = reduce_pool(
+                    pool_i, w_i, lvl,
+                    jax.random.fold_in(shard_keys[i], 1 + jl), backend=be)
+            dropped[i] = dropped[i] + jnp.round(wd).astype(jnp.int32)
+        pools.append(np.asarray(pool_i))
+        pool_ws.append(np.asarray(w_i))
+        n_dropped_total += int(dropped[i])
+    n_dropped = jnp.asarray(n_dropped_total, jnp.int32)
+    peak_pool = max(a.peak_rows for a in accs)
+
+    pool_np = (pools[0] if len(pools) == 1
+               else np.concatenate(pools, axis=0))
+    pool_w_np = (pool_ws[0] if len(pool_ws) == 1
+                 else np.concatenate(pool_ws, axis=0))
+    pool = jnp.asarray(pool_np)
+    pool_w = jnp.asarray(pool_w_np)
+
+    with log.timer("merge", pool=int(pool.shape[0]), k=spec.merge.k,
+                   merge_path=spec.execution.merge_path):
+        if spec.execution.merge_path == "distributed":
+            # pools stay device-resident; one collective per Lloyd round
+            # moves only the k global centers (padded rows carry 0 weight);
+            # empty shards rejoin the mesh as a single all-dead row
+            merge_pools, merge_ws = list(pools), list(pool_ws)
+            while len(merge_pools) < n_dev:
+                merge_pools.append(np.zeros((1, pool_np.shape[-1]),
+                                            pool_np.dtype))
+                merge_ws.append(np.zeros((1,), pool_w_np.dtype))
+            centers = merge_pool_distributed(merge_pools, merge_ws, spec,
+                                             mesh, key_global, backend=be)
+        else:
+            # replicated: host-gathered pool, eager merge — the same
+            # merge_pool call fit_chunked makes (the 1-device parity pin)
+            centers = merge_pool(pool, pool_w, spec.merge, key_global,
+                                 backend=be).centers
+
+    local_centers = pool
+    if spec.scale:
+        params = (jnp.asarray(lo_np), jnp.asarray(span_np))
+        centers = unscale(centers, params)
+        local_centers = unscale(local_centers, params)
+
+    if spec.chunk.sse == "exact":
+        with log.timer("sse_pass", devices=n_dev):
+            totals = []
+            for i, shard in enumerate(shards):
+                c_i = jax.device_put(centers, devs[i])
+                s = sse_pass(shard, c_i, cp, prefetch=depth, device=devs[i])
+                if s is not None:
+                    totals.append(s)
+            # 1 device: the untouched device total — bitwise fit_chunked;
+            # n devices: host-order sum of per-shard partials
+            total_sse = (totals[0] if len(totals) == 1
+                         else jnp.asarray(sum(float(s) for s in totals),
+                                          jnp.float32))
+        passes += 1
+        log.event("pass_rss", stage="sse", peak_rss_mb=peak_rss_mb())
+    else:  # "pool": weighted SSE of the representatives, no extra pass
+        with log.timer("sse_pool"):
+            total_sse = sse_fn(local_centers, centers, weights=pool_w)
+
+    result = SampledClusteringResult(centers, total_sse, local_centers,
+                                     pool_w, n_dropped)
+    stats = ChunkDistStats(n_points=n_points, n_chunks=n_chunks,
+                           max_chunk_points=max_chunk,
+                           pool_size=int(pool.shape[0]), prefetch=depth,
+                           passes=passes, n_devices=n_dev,
+                           per_device_points=tuple(dev_points),
+                           per_device_chunks=tuple(dev_chunks),
+                           peak_pool_rows=peak_pool)
+    if log is not NULL:
+        jax.block_until_ready(total_sse)   # telemetry-only sync: wall
+        #                                    times mean "result ready"
+        wall = _now() - t_start
+        summary = stats._asdict()
+        summary["per_device_points"] = list(stats.per_device_points)
+        summary["per_device_chunks"] = list(stats.per_device_chunks)
+        log.event("fit_chunked_dist", k=spec.merge.k, levels=spec.n_levels,
+                  backend=be.name, merge_path=spec.execution.merge_path,
+                  wall_s=wall, points_per_sec=n_points / max(wall, 1e-9),
+                  peak_rss_mb=peak_rss_mb(), **summary)
+    return result, stats

@@ -50,6 +50,13 @@ Array = jax.Array
 # in a large offset so they can never collide with the reduce-level streams
 # fold_in(key_local, 1 + level_index)
 _CHUNK_KEY_OFFSET = 1_000_003
+# shard s > 0 of the sharded executor derives every per-device stream from
+# fold_in(key_local, _SHARD_KEY_OFFSET + s); shard 0 reuses key_local's
+# streams verbatim — the 1-device/1-shard bit-for-bit parity pin
+_SHARD_KEY_OFFSET = 5_000_011
+# bounded-accumulator flushes get their own stream so an early fold of
+# pending chunk pools can never collide with the final reduce levels
+_FLUSH_KEY_OFFSET = 7_000_003
 
 
 class SampledClusteringResult(NamedTuple):
@@ -252,6 +259,24 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
 # The out-of-core chunked executor (mode="chunked")
 # ---------------------------------------------------------------------------
 
+def minmax_pass(source, chunk_points: int, *, prefetch: int = 2,
+                device=None) -> tuple[Optional[Array], Optional[Array]]:
+    """Running per-attribute ``(min, max)`` over a source's chunks —
+    ``(None, None)`` when the source yields no chunks.  Min/max are exact
+    and order-independent, so per-shard partials from the sharded executor
+    combine (``jnp.minimum``/``jnp.maximum`` on the host) into exactly the
+    whole-source answer.  ``device`` pins the pass's buffers (per-shard
+    use)."""
+    from repro.data.source import prefetch_to_device
+    lo = hi = None
+    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch,
+                                    device=device):
+        clo, chi = jnp.min(chunk, axis=0), jnp.max(chunk, axis=0)
+        lo = clo if lo is None else jnp.minimum(lo, clo)
+        hi = chi if hi is None else jnp.maximum(hi, chi)
+    return lo, hi
+
+
 def scale_pass(source, chunk_points: int, *, prefetch: int = 2,
                eps: float = 1e-9) -> tuple[Array, Array]:
     """Streaming feature-scale parameters: one pass of running per-attribute
@@ -259,28 +284,26 @@ def scale_pass(source, chunk_points: int, *, prefetch: int = 2,
     :func:`feature_scale`.  Returns the same ``(lo, span)`` pair (span
     clamped at ``eps``), bit-for-bit equal to the resident computation when
     the source fits in one chunk."""
-    from repro.data.source import prefetch_to_device
-    lo = hi = None
-    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch):
-        clo, chi = jnp.min(chunk, axis=0), jnp.max(chunk, axis=0)
-        lo = clo if lo is None else jnp.minimum(lo, clo)
-        hi = chi if hi is None else jnp.maximum(hi, chi)
+    lo, hi = minmax_pass(source, chunk_points, prefetch=prefetch)
     if lo is None:
         raise ValueError("scale_pass: the source yielded no chunks")
     return lo, jnp.maximum(hi - lo, eps)
 
 
 def sse_pass(source, centers: Array, chunk_points: int, *,
-             prefetch: int = 2) -> Array:
+             prefetch: int = 2, device=None) -> Optional[Array]:
     """Chunked exact SSE: the final-accuracy pass of the out-of-core
     executor.  Memory stays O(chunk_points · k); a single-chunk traversal
-    is the identical ``sse_fn(x, centers)`` call the batch pipeline makes."""
+    is the identical ``sse_fn(x, centers)`` call the batch pipeline makes.
+    ``device`` pins the pass to one device (per-shard use, where an empty
+    shard legitimately contributes ``None``)."""
     from repro.data.source import prefetch_to_device
     total = None
-    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch):
+    for chunk in prefetch_to_device(source.chunks(chunk_points), prefetch,
+                                    device=device):
         s = sse_fn(chunk, centers)
         total = s if total is None else total + s
-    if total is None:
+    if total is None and device is None:
         raise ValueError("sse_pass: the source yielded no chunks")
     return total
 
@@ -294,6 +317,92 @@ class ChunkStats(NamedTuple):
     pool_size: int         # representative pool rows the merge stage saw
     prefetch: int          # chunks in flight at once (host→device buffer)
     passes: int            # data passes: fold (+ scale) (+ exact SSE)
+    peak_pool_rows: int = 0  # most pool rows ever alive during the fold —
+    #                          bounded O(level pool) by the flush
+    #                          accumulator, NOT O(n_chunks · pool)
+
+
+class _PoolAccumulator:
+    """Bounded accumulator for the fold pass's per-chunk pools.
+
+    Without reduce levels every chunk pool must survive to the final
+    concatenate (the merge needs them all) — but when ``spec.levels`` is
+    set, pending chunk pools can be folded early through ``levels[0]``
+    (the same :func:`reduce_pool` the final chain applies) once
+    :data:`repro.core.spec.CHUNK_FOLD_BUFFER` of them accumulate.  Host
+    peak pool memory becomes O(level pool), not O(n_chunks · pool_chunk),
+    which is what makes million-chunk runs possible.  ``finalize`` returns
+    the concatenated remainder, to which the caller applies the *full*
+    level chain — so runs that never flush (fewer than ``CHUNK_FOLD_BUFFER``
+    chunks, or no levels) are bit-for-bit what the unbuffered executor
+    produced.  Each flush draws from the dedicated
+    ``_FLUSH_KEY_OFFSET + shard`` stream, disjoint from the per-chunk and
+    per-level streams."""
+
+    def __init__(self, levels, key_local: Array, *, shard: int = 0,
+                 backend: BackendSpec = None, log=None):
+        from repro.core.spec import CHUNK_FOLD_BUFFER
+        self._level = levels[0] if levels else None
+        self._buffer = CHUNK_FOLD_BUFFER
+        self._key_flush = jax.random.fold_in(key_local,
+                                             _FLUSH_KEY_OFFSET + shard)
+        self._backend = backend
+        self._log = log
+        self._pools: list = []
+        self._ws: list = []
+        self._rows = 0
+        self.peak_rows = 0
+        self.n_flushes = 0
+        self.w_dropped: Optional[Array] = None  # flush-time dropped mass
+
+    def add(self, centers: Array, counts: Array) -> None:
+        self._pools.append(centers)
+        self._ws.append(counts)
+        self._rows += int(centers.shape[0])
+        self.peak_rows = max(self.peak_rows, self._rows)
+        # len - n_flushes = pending chunk pools beyond the folded head
+        if (self._level is not None
+                and len(self._pools) - (1 if self.n_flushes else 0)
+                >= self._buffer):
+            self._flush()
+
+    def _concat(self) -> tuple[Array, Array]:
+        pool = (self._pools[0] if len(self._pools) == 1
+                else jnp.concatenate(self._pools, axis=0))
+        pool_w = (self._ws[0] if len(self._ws) == 1
+                  else jnp.concatenate(self._ws, axis=0))
+        return pool, pool_w
+
+    def _flush(self) -> None:
+        pool, pool_w = self._concat()
+        rows_in = int(pool.shape[0])
+        key = jax.random.fold_in(self._key_flush, self.n_flushes)
+        ctx = (self._log.timer("pool_flush", flush=self.n_flushes,
+                               rows_in=rows_in)
+               if self._log is not None else _null_ctx())
+        with ctx:
+            pool, pool_w, wd = reduce_pool(pool, pool_w, self._level, key,
+                                           backend=self._backend)
+        self.w_dropped = wd if self.w_dropped is None else self.w_dropped + wd
+        self._pools, self._ws = [pool], [pool_w]
+        self._rows = int(pool.shape[0])
+        self.peak_rows = max(self.peak_rows, self._rows)
+        self.n_flushes += 1
+
+    def finalize(self) -> tuple[Array, Array]:
+        """Concatenated (pool, weights) of the folded head plus pending
+        chunk pools — what the final level chain and merge stage consume."""
+        if not self._pools:
+            raise ValueError("fold accumulator: no chunk pools were added")
+        return self._concat()
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
 
 
 @functools.partial(jax.jit, static_argnames=("lv", "backend"))
@@ -318,10 +427,14 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
       1. ``scale_pass`` — running min/max -> the global feature-scale
          parameters (skipped when ``spec.scale`` is off);
       2. the fold — each chunk is scaled, partitioned and summarised by the
-         jitted :func:`chunk_fold`; the weighted center pools concatenate
-         and per-chunk Algorithm-2 drops accumulate into ``n_dropped``;
-         a ragged tail chunk smaller than ``n_sub`` clamps its partition
-         count to the chunk size so no mandatory partition is ever empty;
+         jitted :func:`chunk_fold`; the weighted center pools accumulate
+         (folded early through ``levels[0]`` every ``CHUNK_FOLD_BUFFER``
+         pending pools when the spec has reduce levels, so host peak pool
+         memory is O(level pool) — ``ChunkStats.peak_pool_rows`` — not
+         O(n_chunks · pool)) and per-chunk Algorithm-2 drops accumulate
+         into ``n_dropped``; a ragged tail chunk smaller than ``n_sub``
+         clamps its partition count to the chunk size so no mandatory
+         partition is ever empty;
       3. ``spec.levels`` reduce the accumulated pool and ``merge_pool``
          produces the k global centers — identical code to the resident
          pipeline;
@@ -362,7 +475,8 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
             lo, span = scale_pass(source, cp, prefetch=depth)
         passes += 1
 
-    pools, pool_ws = [], []
+    acc = _PoolAccumulator(spec.levels, key_local, shard=0, backend=be,
+                           log=(log if log is not NULL else None))
     n_dropped = jnp.asarray(0, jnp.int32)
     n_points = n_chunks = max_chunk = 0
     fold_rate = log.rate("fold_rate", units="points")
@@ -381,8 +495,7 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
                   else jax.random.fold_in(key_local, _CHUNK_KEY_OFFSET + i))
             c, w, nd = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv,
                                           backend=be)
-            pools.append(c)
-            pool_ws.append(w)
+            acc.add(c, w)
             n_dropped = n_dropped + nd
             n_points += m
             n_chunks += 1
@@ -391,9 +504,9 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
     if n_chunks == 0:
         raise ValueError("fit_chunked: the source yielded no points")
 
-    pool = pools[0] if len(pools) == 1 else jnp.concatenate(pools, axis=0)
-    pool_w = (pool_ws[0] if len(pool_ws) == 1
-              else jnp.concatenate(pool_ws, axis=0))
+    pool, pool_w = acc.finalize()
+    if acc.w_dropped is not None:   # early flushes can clamp overflow mass
+        n_dropped = n_dropped + jnp.round(acc.w_dropped).astype(jnp.int32)
 
     for j, lvl in enumerate(spec.levels):
         with log.timer("reduce_level", level=j, pool_in=int(pool.shape[0])):
@@ -423,7 +536,7 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
     stats = ChunkStats(n_points=n_points, n_chunks=n_chunks,
                        max_chunk_points=max_chunk,
                        pool_size=int(pool.shape[0]), prefetch=depth,
-                       passes=passes)
+                       passes=passes, peak_pool_rows=acc.peak_rows)
     if log is not NULL:
         jax.block_until_ready(total_sse)   # telemetry-only sync: wall
         #                                    times mean "result ready"

@@ -29,9 +29,26 @@ from typing import Any, Mapping, Optional
 
 from .backend import BackendSpec, LloydBackend
 
-_MODES = ("auto", "single", "shard_map", "stream", "chunked")
+_MODES = ("auto", "single", "shard_map", "stream", "chunked",
+          "chunked_dist")
 _MERGE_PATHS = ("replicated", "distributed")
 _SSE_POLICIES = ("exact", "pool")
+
+# Out-of-core fold accumulator bound: once this many per-chunk pools are
+# pending and the spec has reduce levels, the executor folds them through
+# levels[0] into a single bounded pool instead of holding every chunk's
+# pool until the final concatenate.  A module constant (not a ChunkSpec
+# field) so serialized specs and their stable_hash stay unchanged.
+CHUNK_FOLD_BUFFER = 8
+
+
+def _level_out(n: int, lv: "LevelSpec") -> int:
+    """Pool rows produced by one reduce level over ``n`` pool rows — the
+    exact accounting of :func:`repro.core.pipeline.reduce_pool`."""
+    cap = -(-n // lv.n_sub)  # ceil — Algorithm 1's slot count
+    if lv.scheme == "unequal":
+        cap = min(int(cap * lv.capacity_factor), n)
+    return lv.n_sub * max(1, cap // lv.compression)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,9 +156,14 @@ class ExecutionSpec:
     engine: ``"single"`` (one-device vmap), ``"shard_map"`` (pod-scale,
     needs a mesh), ``"stream"`` (incremental coreset engine), ``"chunked"``
     (out-of-core: the data arrives as a :class:`repro.data.source.DataSource`
-    and only ever lives chunk-by-chunk — see :class:`ChunkSpec`), or
-    ``"auto"`` (shard_map when a mesh is supplied, chunked when the input is
-    a non-resident DataSource, else single).  ``mesh_axis`` is the
+    and only ever lives chunk-by-chunk — see :class:`ChunkSpec`),
+    ``"chunked_dist"`` (out-of-core × multi-device: the source is split via
+    ``DataSource.shard(i, n)``, each mesh device folds its own shard's
+    chunks locally and only the final per-device pools cross the mesh for
+    the merge), or ``"auto"`` (chunked_dist when a mesh AND a non-resident
+    DataSource are supplied, shard_map when only a mesh is, chunked when
+    only the input is a non-resident DataSource, else single).
+    ``mesh_axis`` is the
     mesh axis the data is sharded along; ``donate`` lets jit reuse the input
     buffer for single-mode fits (the points are consumed anyway).
     ``merge_path`` picks the shard_map merge strategy: ``"replicated"``
@@ -340,11 +362,17 @@ class ClusterSpec:
         """Pool accounting for the out-of-core executor: every chunk of
         ``chunk.chunk_points`` rows contributes its own base-stage pool
         (the executor clamps ``n_sub`` to the chunk size, so a ragged tail
-        never creates empty mandatory partitions), the chunk pools
-        concatenate, and the extra ``levels`` then shrink the combined pool
-        exactly as in :meth:`pool_schedule`.  ``chunked_pool_schedule(n)[-1]``
-        is what the merge stage sees — the planner rejects chunked plans
-        where it falls below ``merge.k``."""
+        never creates empty mandatory partitions), chunk pools accumulate
+        — folded through ``levels[0]`` every :data:`CHUNK_FOLD_BUFFER`
+        pending chunks when the spec has reduce levels, so the host peak
+        stays O(level pool) — and the extra ``levels`` then shrink the
+        final accumulated pool exactly as in :meth:`pool_schedule`.
+        ``chunked_pool_schedule(n)[0]`` is the accumulated pool entering
+        the level chain and ``[-1]`` is what the merge stage sees — the
+        planner rejects chunked plans where it falls below ``merge.k``.
+        This simulates :func:`repro.core.pipeline.fit_chunked`'s bounded
+        accumulator row-exactly (``ChunkStats.pool_size`` is pinned to
+        ``[-1]`` by the regression tests)."""
         base = self.level_schedule()[0]
 
         def chunk_pool(m: int) -> int:
@@ -355,17 +383,39 @@ class ClusterSpec:
             return n_sub * max(1, cap // base.compression)
 
         n_full, tail = divmod(int(n_points), self.chunk.chunk_points)
-        pool = n_full * chunk_pool(self.chunk.chunk_points)
+        chunk_pools = [chunk_pool(self.chunk.chunk_points)] * n_full
         if tail:
-            pool += chunk_pool(tail)
-        sizes, n = [pool], pool
+            chunk_pools.append(chunk_pool(tail))
+
+        acc, pending_rows, pending = 0, 0, 0
+        for rows in chunk_pools:
+            pending_rows += rows
+            pending += 1
+            if self.levels and pending >= CHUNK_FOLD_BUFFER:
+                acc = _level_out(acc + pending_rows, self.levels[0])
+                pending_rows = pending = 0
+        sizes = [acc + pending_rows]
         for lv in self.levels:
-            cap = -(-n // lv.n_sub)
-            if lv.scheme == "unequal":
-                cap = min(int(cap * lv.capacity_factor), n)
-            n = lv.n_sub * max(1, cap // lv.compression)
-            sizes.append(n)
+            sizes.append(_level_out(sizes[-1], lv))
         return tuple(sizes)
+
+    def chunked_dist_pool_schedule(self, n_points: int,
+                                   n_devices: int) -> tuple:
+        """Pool accounting for the sharded out-of-core executor
+        (``mode="chunked_dist"``): each of the ``n_devices`` shards runs
+        the full per-device :meth:`chunked_pool_schedule` over roughly
+        ``n_points // n_devices`` rows, then the final per-device pools
+        concatenate for the merge.  Returns the per-shard schedule with
+        the global concatenated pool appended — ``[-1]`` is what the merge
+        stage sees; the planner rejects plans where it falls below
+        ``merge.k``.  (Shard row counts differ by at most one chunk; the
+        floor-division estimate is the conservative per-shard floor.)"""
+        if n_devices < 1:
+            raise ValueError(
+                f"chunked_dist_pool_schedule: n_devices must be >= 1, got "
+                f"{n_devices}")
+        per = self.chunked_pool_schedule(int(n_points) // n_devices)
+        return per + (per[-1] * n_devices,)
 
     def replace(self, **kwargs) -> "ClusterSpec":
         """``dataclasses.replace`` that also reaches one level down:

@@ -24,9 +24,24 @@ why :class:`IterSource` takes a zero-argument *factory* returning a fresh
 iterator, not a bare generator object (which is single-use and rejected
 with an explanatory error).
 
+Every source also splits: ``source.shard(i, n)`` returns the ``i``-th of
+``n`` disjoint sub-sources whose union (at a fixed ``chunk_points``) is
+exactly the parent's point set.  Shards are themselves restartable
+DataSources, which is what lets the sharded out-of-core executor
+(``mode="chunked_dist"``) give every mesh device its own independent chunk
+stream: :class:`ArraySource` shards by contiguous row range (exact
+``shape`` preserved), :class:`SyntheticSource` by chunk index (each shard
+generates only its own chunks — skipped chunks cost nothing),
+:class:`IterSource` by striding over its re-batched chunk stream (or via a
+user ``shard_factory`` when the underlying storage is natively split, e.g.
+one file per shard).
+
 :func:`prefetch_to_device` is the host→device double-buffer: it keeps
 ``depth`` chunks in flight via ``jax.device_put`` (asynchronous on
 accelerators) so the device never waits on host-side chunk preparation.
+``device=`` pins the buffers to one specific device — each shard of the
+sharded executor prefetches onto its own device — and chunks that already
+live committed on the target device skip the redundant transfer.
 """
 from __future__ import annotations
 
@@ -51,6 +66,8 @@ class DataSource:
       * ``chunks(chunk_points)`` — a fresh iterator of ``(m, dim)`` host
         arrays with ``m <= chunk_points`` (only the final chunk may be
         ragged).  Must be restartable: the executor takes several passes.
+      * ``shard(i, n)`` — the ``i``-th of ``n`` disjoint sub-sources whose
+        union at any fixed ``chunk_points`` is the parent's point set.
     """
 
     dim: Optional[int] = None
@@ -59,6 +76,19 @@ class DataSource:
     def chunks(self, chunk_points: int) -> Iterator[np.ndarray]:
         raise NotImplementedError
 
+    def shard(self, index: int, count: int) -> "DataSource":
+        """Split into ``count`` disjoint, restartable sub-sources and return
+        the ``index``-th.  The default strides over the re-batched chunk
+        stream (shard ``i`` keeps chunks ``i, i+count, i+2·count, ...`` at
+        whatever ``chunk_points`` the consumer traverses with), so the
+        shards are disjoint and union-complete by construction.  Subclasses
+        override with cheaper splits (row ranges, chunk-index generation).
+        """
+        _check_shard(index, count)
+        if count == 1:
+            return self
+        return _StridedShard(self, index, count)
+
     @property
     def shape(self) -> Optional[tuple]:
         """(n_points, dim) when both are known, else ``None`` — what the
@@ -66,6 +96,37 @@ class DataSource:
         if self.n_points is None or self.dim is None:
             return None
         return (self.n_points, self.dim)
+
+
+def _check_shard(index: int, count: int) -> None:
+    if count < 1:
+        raise ValueError(f"shard: count must be >= 1, got {count}")
+    if not 0 <= index < count:
+        raise ValueError(f"shard: index {index} out of range for "
+                         f"count {count}")
+
+
+class _StridedShard(DataSource):
+    """Generic ``shard(i, n)``: every ``n``-th chunk of the parent's
+    re-batched stream, starting at chunk ``i``.  The parent stream is still
+    traversed on this host (skipped chunks are produced and discarded), so
+    this is the fallback for opaque iterators — sources that can address
+    their pieces directly (arrays, synthetic generators, shard-aware
+    factories) override :meth:`DataSource.shard` instead.
+    """
+
+    def __init__(self, parent: DataSource, index: int, count: int):
+        self.parent, self.index, self.count = parent, index, count
+        self.n_points = None        # per-shard rows depend on chunk_points
+
+    @property
+    def dim(self) -> Optional[int]:   # IterSource infers dim lazily
+        return self.parent.dim
+
+    def chunks(self, chunk_points: int) -> Iterator[np.ndarray]:
+        for j, chunk in enumerate(self.parent.chunks(chunk_points)):
+            if j % self.count == self.index:
+                yield chunk
 
 
 class ArraySource(DataSource):
@@ -89,6 +150,18 @@ class ArraySource(DataSource):
         for start in range(0, self.n_points, chunk_points):
             yield self.array[start:start + chunk_points]
 
+    def shard(self, index: int, count: int) -> "ArraySource":
+        """Balanced contiguous row-range split: shard ``i`` holds rows
+        ``[i·n/count, (i+1)·n/count)`` (numpy slices are views — no copy;
+        jax slices stay on device).  Exact per-shard ``shape`` is preserved,
+        so the planner's fail-fast accounting keeps working per shard."""
+        _check_shard(index, count)
+        if count == 1:
+            return self
+        lo = (index * self.n_points) // count
+        hi = ((index + 1) * self.n_points) // count
+        return ArraySource(self.array[lo:hi])
+
 
 class IterSource(DataSource):
     """Any host iterator as a source, re-batched to fixed-size chunks.
@@ -106,10 +179,17 @@ class IterSource(DataSource):
                simply skipped).
     n_points:  total rows, when known (enables the planner's pool-schedule
                fail-fast check).
+    shard_factory: optional ``(index, count) -> factory`` hook for storage
+               that is natively split (one file per shard, a partitioned
+               table): ``shard(i, n)`` then wraps
+               ``shard_factory(i, n)`` in a fresh IterSource instead of
+               striding over the whole re-batched stream on one host.
+               The hook owns disjointness/completeness of the split.
     """
 
     def __init__(self, factory: Callable[[], Iterable] | Iterable, *,
-                 dim: Optional[int] = None, n_points: Optional[int] = None):
+                 dim: Optional[int] = None, n_points: Optional[int] = None,
+                 shard_factory: Optional[Callable] = None):
         if callable(factory):
             self._factory = factory
         elif iter(factory) is factory:
@@ -122,8 +202,26 @@ class IterSource(DataSource):
         else:
             seq = factory
             self._factory = lambda: iter(seq)
+        if shard_factory is not None and not callable(shard_factory):
+            raise ValueError(
+                "IterSource: shard_factory must be a callable "
+                "(index, count) -> iterator factory")
+        self._shard_factory = shard_factory
         self.dim = dim
         self.n_points = n_points
+
+    def shard(self, index: int, count: int) -> DataSource:
+        """With a ``shard_factory``, shard ``i`` is a fresh IterSource over
+        ``shard_factory(i, count)`` (natively split storage — row counts per
+        shard are unknown unless the factory's pieces say so).  Without
+        one, falls back to the generic strided-chunk split."""
+        _check_shard(index, count)
+        if count == 1:
+            return self
+        if self._shard_factory is not None:
+            return IterSource(self._shard_factory(index, count),
+                              dim=self.dim)
+        return _StridedShard(self, index, count)
 
     def chunks(self, chunk_points: int) -> Iterator[np.ndarray]:
         buf: list[np.ndarray] = []
@@ -175,14 +273,53 @@ class SyntheticSource(DataSource):
         self.centers = rng.uniform(
             0.0, 10.0, (self.n_clusters, dim)).astype(np.float32)
 
+    def _chunk(self, i: int, chunk_points: int) -> np.ndarray:
+        """Chunk ``i`` of the ``chunk_points`` traversal — addressable by
+        index, deterministic per (seed, i), which is what makes both the
+        executor's multiple passes and :meth:`shard` exact."""
+        start = i * chunk_points
+        m = min(chunk_points, self.n_points - start)
+        rng = np.random.default_rng((self.seed, 1 + i))
+        ids = rng.integers(0, self.n_clusters, m)
+        return (self.centers[ids]
+                + rng.normal(0.0, self.spread * 10.0, (m, self.dim))
+                ).astype(np.float32)
+
     def chunks(self, chunk_points: int) -> Iterator[np.ndarray]:
-        for i, start in enumerate(range(0, self.n_points, chunk_points)):
-            m = min(chunk_points, self.n_points - start)
-            rng = np.random.default_rng((self.seed, 1 + i))
-            ids = rng.integers(0, self.n_clusters, m)
-            yield (self.centers[ids]
-                   + rng.normal(0.0, self.spread * 10.0, (m, self.dim))
-                   ).astype(np.float32)
+        for i in range(-(-self.n_points // chunk_points)):
+            yield self._chunk(i, chunk_points)
+
+    def shard(self, index: int, count: int) -> DataSource:
+        """Chunk-index partition: shard ``i`` generates exactly the chunks
+        ``i, i+count, ...`` of the parent traversal — unlike the generic
+        strided fallback, skipped chunks are never synthesized, so ``n``
+        shards cost the same total work as one full traversal."""
+        _check_shard(index, count)
+        if count == 1:
+            return self
+        return _SyntheticShard(self, index, count)
+
+
+class _SyntheticShard(DataSource):
+    """Every ``count``-th chunk of a :class:`SyntheticSource`, generated
+    directly by chunk index — skipped chunks are never materialized, and
+    chunk ``j``'s bytes are identical to the parent's chunk ``j``."""
+
+    def __init__(self, parent: SyntheticSource, index: int, count: int):
+        self.parent = parent
+        self.index = index
+        self.count = count
+        # the executor sizes shard chunks by count, not by a row total
+        self.n_points = None
+
+    @property
+    def dim(self) -> int:
+        return self.parent.dim
+
+    def chunks(self, chunk_points: int) -> Iterator[np.ndarray]:
+        n_chunks = -(-self.parent.n_points // chunk_points)
+        for j in range(self.index, n_chunks, self.count):
+            yield self.parent._chunk(j, chunk_points)
 
 
 def as_source(x) -> DataSource:
@@ -197,7 +334,19 @@ def as_source(x) -> DataSource:
         f"{type(x).__name__} (wrap host iterators in IterSource)")
 
 
-def prefetch_to_device(chunks: Iterable, depth: int = 2) -> Iterator[Array]:
+def _device_resident(x, device) -> bool:
+    """True when ``x`` is already a single-device jax array that a
+    ``jax.device_put`` would leave untouched — committed to ``device``
+    when one is requested, anywhere when the placement is unconstrained."""
+    if not isinstance(x, jax.Array) or len(x.devices()) != 1:
+        return False
+    if device is None:
+        return True
+    return bool(x.committed) and next(iter(x.devices())) == device
+
+
+def prefetch_to_device(chunks: Iterable, depth: int = 2, *,
+                       device=None) -> Iterator[Array]:
     """Double-buffered host→device pipeline.
 
     Keeps up to ``depth`` chunks in flight: each is handed to
@@ -207,15 +356,27 @@ def prefetch_to_device(chunks: Iterable, depth: int = 2) -> Iterator[Array]:
     overlaps device compute.  ``depth=1`` degenerates to plain sequential
     transfer.  At most ``depth`` chunks are resident at once — this bound
     is what the out-of-core accounting (``ChunkStats``) reports.
+
+    ``device`` pins every transfer to a specific device (the sharded
+    executor gives each shard its own device this way).  Chunks that are
+    already single-device jax arrays in the right place are yielded as-is
+    instead of paying a redundant copy — the ``ArraySource``-over-jax-array
+    case.
     """
     if depth < 1:
         raise ValueError(f"prefetch_to_device: depth must be >= 1, "
                          f"got {depth}")
+
+    def _put(x):
+        if _device_resident(x, device):
+            return x
+        return jax.device_put(x, device)
+
     it = iter(chunks)
     buf: collections.deque = collections.deque()
     try:
         while len(buf) < depth:
-            buf.append(jax.device_put(next(it)))
+            buf.append(_put(next(it)))
     except StopIteration:
         pass
     while buf:
@@ -224,6 +385,6 @@ def prefetch_to_device(chunks: Iterable, depth: int = 2) -> Iterator[Array]:
         # yielded one plus depth-1 buffered — honoring the documented bound
         yield buf.popleft()
         try:
-            buf.append(jax.device_put(next(it)))
+            buf.append(_put(next(it)))
         except StopIteration:
             pass

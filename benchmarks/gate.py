@@ -53,6 +53,12 @@ TOLERANCES = {
     "rel_sse":        ("lower",  "abs", 0.05, False),
     "overhead":       ("lower",  "abs", 0.05, False),
     "peak_rss_mb":    ("lower",  "rel", 0.50, False),
+    # IVF/PQ index artifacts (bench_index.py): recall is deterministic per
+    # (spec, seed) so a 5-point drop must trip; qps is machine-speed
+    # dependent and gets the same calibrated slack as points_per_sec
+    "recall_at_10":   ("higher", "abs", 0.05, False),
+    "qps":            ("higher", "rel", 0.25, True),
+    "build_points_per_sec": ("higher", "rel", 0.25, True),
 }
 
 

@@ -30,6 +30,8 @@ SCHEMA = 1
 # from the point (partial artifacts yield partial points, not errors)
 _SPEC_METRICS = ("points_per_sec", "us_best", "sse", "rel_sse",
                  "peak_rss_mb", "fold_scaling")
+_INDEX_METRICS = ("recall_at_10", "qps", "qps_speedup", "brute_qps",
+                  "build_points_per_sec", "peak_rss_mb")
 
 
 class SkipArtifact(Exception):
@@ -73,6 +75,17 @@ def normalize(record, source: str = "<mem>") -> list:
         mode = record.get("mode", "?")
         backend = record.get("backend", "?")
         metrics = {m: float(record[m]) for m in _SPEC_METRICS
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(spec_hash, mode, backend), bench, name,
+                       metrics, record, source)]
+
+    if bench == "index":
+        name = record.get("name") or pathlib.Path(source).stem.replace(
+            "BENCH_", "")
+        spec_hash = record.get("spec_hash", name)
+        mode = record.get("mode", "?")
+        backend = record.get("backend", "?")
+        metrics = {m: float(record[m]) for m in _INDEX_METRICS
                    if isinstance(record.get(m), (int, float))}
         return [_point(_key(spec_hash, mode, backend), bench, name,
                        metrics, record, source)]

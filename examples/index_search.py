@@ -1,0 +1,78 @@
+"""ANN search walkthrough: build an IVF/PQ index out-of-core, query it,
+and compare recall + throughput against the exact brute-force scan.
+
+  PYTHONPATH=src python examples/index_search.py \
+      [--n 200000] [--dim 64] [--nlist 256] [--nprobe 2] [--k 10]
+
+The corpus streams from a ``SyntheticSource`` (chunk-addressable, nothing
+resident); the build's two passes — train the coarse quantizer + PQ
+codebooks on a prefix sample, then stream-encode every row — keep at most
+the training sample plus the prefetch window in memory, and the
+``IndexBuildStats`` accounting printed below proves it.  Queries then
+probe ``nprobe`` cells and ADC-scan their candidate codes through the
+``kernels/scan.py`` kernel (jnp reference off-TPU).
+"""
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=200_000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--nlist", type=int, default=256)
+    ap.add_argument("--nprobe", type=int, default=2)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=256)
+    args = ap.parse_args()
+
+    import jax
+    import numpy as np
+    from repro.data.source import SyntheticSource
+    from repro.index import (IndexSpec, build_index, exact_search,
+                             recall_at_k)
+
+    src = SyntheticSource(args.n, dim=args.dim, n_clusters=args.nlist,
+                          seed=7)
+    rng = np.random.default_rng(11)
+    queries = (src.centers[rng.integers(0, args.nlist, args.queries)]
+               + rng.normal(0, 0.4, (args.queries, args.dim))
+               ).astype(np.float32)
+
+    # one subspace per dimension (8 bits each) — the high-recall layout;
+    # coarse seeding defaults to kmeans|| (Scalable K-Means++)
+    spec = IndexSpec.make(nlist=args.nlist, n_subspaces=args.dim, bits=8,
+                          nprobe=args.nprobe, train_points=32768,
+                          chunk_points=65536)
+
+    t0 = time.perf_counter()
+    index, stats = build_index(src, spec, jax.random.PRNGKey(0))
+    jax.block_until_ready(index.codes)
+    print(f"built {index!r} in {time.perf_counter() - t0:.1f}s")
+    print(f"  build stats: {stats._asdict()}")
+    print(f"  resident ceiling {stats.max_resident_rows} rows "
+          f"of {stats.n_points} total")
+
+    # exact ground truth (streaming fold — also never resident); a
+    # SyntheticSource's rows depend on the chunk size, so traverse with the
+    # same chunk_points the build used or the ids describe another corpus
+    true_d, true_i = exact_search(src, queries, k=args.k,
+                                  chunk_points=spec.coarse.chunk.chunk_points)
+
+    index.search(queries, k=args.k)                  # compile + warm
+    t0 = time.perf_counter()
+    dists, ids = index.search(queries, k=args.k)
+    jax.block_until_ready(ids)
+    dt = time.perf_counter() - t0
+    print(f"search: {args.queries} queries, k={args.k}, "
+          f"nprobe={args.nprobe}: {args.queries / dt:.0f} qps, "
+          f"recall@{args.k} = {recall_at_k(ids, true_i):.4f}")
+
+    wider = min(8 * args.nprobe, args.nlist)
+    _, ids_w = index.search(queries, k=args.k, nprobe=wider)
+    print(f"  nprobe={wider}: recall@{args.k} = "
+          f"{recall_at_k(ids_w, true_i):.4f} (quality/latency dial)")
+
+
+if __name__ == "__main__":
+    main()

@@ -407,21 +407,26 @@ class SampledKMeans:
         if self.centers_ is None:
             raise RuntimeError("SampledKMeans: call fit/partial_fit first")
 
-    def predict(self, x) -> Array:
+    def predict(self, x, *, block: int | None = PREDICT_BLOCK) -> Array:
         """Nearest-center id per point (through the planned backend).
 
-        Accepts a resident array or a :class:`~repro.data.source.DataSource`
-        (assigned chunk-by-chunk, so ``fit_predict`` works out-of-core —
-        only the (n,) label vector materializes)."""
+        Memory-bounded like ``transform``/``score``: the assignment runs
+        ``block`` rows at a time (O(block · k) working set, identical
+        labels to the dense evaluation; ``block=None`` forces the dense
+        path).  Accepts a resident array or a
+        :class:`~repro.data.source.DataSource` (assigned chunk-by-chunk,
+        so ``fit_predict`` works out-of-core — only the (n,) label vector
+        materializes)."""
         self._check_fitted()
         be = self.plan().backend
         if isinstance(x, DataSource):
-            parts = [be.assign_points(jnp.asarray(c), self.centers_)[0]
+            parts = [be.assign_points(jnp.asarray(c), self.centers_,
+                                      block=block)[0]
                      for c in x.chunks(self.spec.chunk.chunk_points)]
             if not parts:
                 raise ValueError("predict: the source yielded no chunks")
             return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
-        idx, _ = be.assign_points(x, self.centers_)
+        idx, _ = be.assign_points(x, self.centers_, block=block)
         return idx
 
     def transform(self, x: Array, *, block: int = PREDICT_BLOCK) -> Array:

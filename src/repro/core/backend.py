@@ -91,8 +91,29 @@ class LloydBackend:
         return jnp.sum(mind * prep.wp[:prep.m].astype(jnp.float32))
 
     # convenience for one-shot call sites (query paths, metrics)
-    def assign_points(self, x: Array, centers: Array) -> tuple[Array, Array]:
-        return self.assign(self.prepare(x), centers)
+    def assign_points(self, x: Array, centers: Array, *,
+                      block: Optional[int] = None) -> tuple[Array, Array]:
+        """Nearest-center id + squared distance per row.  With ``block``
+        the rows are processed that many at a time (``lax.map`` over fixed
+        blocks, one ragged tail) so the peak working set is
+        O(block · k) however many points are assigned — each row's result
+        depends on that row alone, so the values match the dense path."""
+        m = x.shape[0]
+        if block is None or m <= block:
+            return self.assign(self.prepare(x), centers)
+
+        def dense(rows: Array) -> tuple[Array, Array]:
+            return self.assign(self.prepare(rows), centers)
+
+        nb = m // block
+        head = jax.lax.map(dense,
+                           x[:nb * block].reshape(nb, block, x.shape[1]))
+        idx, dist = (part.reshape(nb * block) for part in head)
+        if m % block:
+            t_idx, t_dist = dense(x[nb * block:])
+            idx = jnp.concatenate([idx, t_idx])
+            dist = jnp.concatenate([dist, t_dist])
+        return idx, dist
 
     # structural equality/hash: get_backend() returns a fresh instance per
     # resolution, but two same-type/same-config backends are the same

@@ -1,0 +1,27 @@
+"""``repro.index`` — IVF/PQ approximate-nearest-neighbor search built from
+the paper's clustering pipeline.
+
+The coarse quantizer is an ordinary :class:`~repro.core.spec.ClusterSpec`
+job; product-quantization codebooks are the local k-means stage vmapped
+over subspaces; queries run through the Pallas ADC scan kernel
+(:mod:`repro.kernels.scan`).  See :mod:`repro.index.ivf` for the build and
+query dataflow, ``docs/architecture.md`` for the subsystem map.
+
+    from repro.index import IndexSpec, build_index
+
+    spec = IndexSpec.make(nlist=256, n_subspaces=16, bits=8, nprobe=8)
+    index, stats = build_index(source, spec)        # any DataSource/array
+    dists, ids = index.search(queries, k=10)        # (Q, k) each
+"""
+from .ivf import (IndexBuildStats, IndexPlan, IVFIndex, build_index,
+                  exact_search, plan_index, recall_at_k, search)
+from .pq import (build_luts, decode, encode_residuals, split_subspaces,
+                 train_codebooks)
+from .spec import IndexSpec, PQSpec
+
+__all__ = [
+    "IndexSpec", "PQSpec", "IndexPlan", "IVFIndex", "IndexBuildStats",
+    "plan_index", "build_index", "search", "exact_search", "recall_at_k",
+    "train_codebooks", "encode_residuals", "decode", "split_subspaces",
+    "build_luts",
+]

@@ -1,0 +1,542 @@
+"""IVF/PQ index build + query: the paper's pipeline serving nearest-neighbor
+search.
+
+Build (:func:`build_index`) is two streaming passes over any
+:class:`~repro.data.source.DataSource`:
+
+  1. **train** — the first ``spec.train_points`` rows (a chunking-invariant
+     prefix) are collected and the coarse quantizer is fit through the
+     ordinary ``plan()``/``execute()`` path of the contained ``ClusterSpec``;
+     PQ codebooks then train on that sample's coarse residuals
+     (:func:`repro.index.pq.train_codebooks`).
+  2. **encode** — every chunk is routed to its cell (the backend's blocked
+     assignment) and PQ-encoded, both pointwise per row; the host only ever
+     holds the training sample plus ``prefetch`` chunks, so the index can
+     exceed host memory.  With a ``mesh``, the source splits via
+     ``source.shard(i, n)`` and each device encodes its own shard's chunk
+     stream (ids are shard-major stream order — for an ``ArraySource``'s
+     contiguous-range shards that is exactly source row order).
+
+Inverted lists are padded dense arrays — ``(nlist, cap)`` slots with a per
+cell ``counts`` — so the query path is one static-shape jit: route each
+query to its ``nprobe`` nearest cells, build per-(query, cell) ADC lookup
+tables, and scan the probed cells' codes through the
+:func:`repro.kernels.scan.adc_scan` kernel.  Empty slots (and empty cells)
+surface as ``+inf`` distance / id ``-1``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import ExecutionPlan, execute, plan
+from repro.core.backend import LloydBackend
+from repro.core.kmeans import pairwise_sqdist
+from repro.data.source import DataSource, as_source, prefetch_to_device
+from repro.kernels.scan import adc_scan, resolve_scan_backend
+from repro.telemetry import NULL, RunLogger, get_run_logger
+
+from .pq import ENCODE_BLOCK, build_luts, encode_residuals, train_codebooks
+from .spec import IndexSpec
+
+Array = jax.Array
+
+# default query block: searches run this many queries per jit dispatch so
+# the gathered candidate codes stay O(q_block · nprobe · cap · m)
+QUERY_BLOCK = 32
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class IndexPlan:
+    """A validated index spec: the coarse quantizer's own
+    :class:`~repro.api.ExecutionPlan` (resolved registries, backend), plus
+    the index-level facts the build needs."""
+    spec: IndexSpec
+    coarse: ExecutionPlan
+    dim: Optional[int] = None
+    n_points: Optional[int] = None
+    mesh: Optional[jax.sharding.Mesh] = None
+    logger: RunLogger = NULL
+
+    @property
+    def nlist(self) -> int:
+        return self.spec.nlist
+
+    @property
+    def backend(self) -> LloydBackend:
+        return self.coarse.backend
+
+
+def plan_index(spec: IndexSpec, data_shape: Optional[tuple] = None, *,
+               mesh: Optional[jax.sharding.Mesh] = None,
+               source: Optional[DataSource] = None,
+               logger: "RunLogger | str | None" = None) -> IndexPlan:
+    """Fail-fast validation for an :class:`IndexSpec` — the index-level
+    analogue of :func:`repro.api.plan`:
+
+      * ``nprobe <= nlist`` (a query cannot probe more cells than exist);
+      * ``train_points`` must cover both codebook training (``>= 2**bits``
+        rows per subspace fit) and the coarse merge (``>= nlist``);
+      * once the dimensionality is known (``data_shape`` or ``source.dim``),
+        ``n_subspaces`` must divide ``d``;
+      * the coarse ``ClusterSpec`` is planned against the *training sample*
+        shape through :func:`repro.api.plan`, which validates its registry
+        names and pool schedule exactly as any clustering job.
+
+    (``bits ∈ {4, 8}`` is enforced at :class:`PQSpec` construction.)
+    """
+    if spec.nprobe > spec.nlist:
+        raise ValueError(
+            f"plan_index: nprobe={spec.nprobe} exceeds nlist={spec.nlist} — "
+            f"a query cannot probe more cells than the index has")
+    if spec.train_points < spec.pq.n_codes:
+        raise ValueError(
+            f"plan_index: train_points={spec.train_points} cannot train "
+            f"{spec.pq.n_codes}-entry codebooks (bits={spec.pq.bits}); "
+            f"need at least 2**bits rows")
+    if spec.train_points < spec.nlist:
+        raise ValueError(
+            f"plan_index: train_points={spec.train_points} cannot place "
+            f"nlist={spec.nlist} coarse centers; raise train_points or "
+            f"lower nlist")
+    d = None
+    n = None
+    if data_shape is not None:
+        n = int(data_shape[0]) if data_shape[0] else None
+        d = int(data_shape[1]) if len(data_shape) > 1 else None
+    if d is None and source is not None:
+        d = source.dim
+    if n is None and source is not None:
+        n = source.n_points
+    if d is not None and d % spec.pq.n_subspaces:
+        raise ValueError(
+            f"plan_index: n_subspaces={spec.pq.n_subspaces} does not "
+            f"divide d={d} — PQ needs equal subspace widths")
+    train_n = spec.train_points if n is None else min(n, spec.train_points)
+    coarse_shape = (train_n, d) if d is not None else None
+    cplan = plan(spec.coarse, coarse_shape, logger=logger)
+    return IndexPlan(spec=spec, coarse=cplan, dim=d, n_points=n, mesh=mesh,
+                     logger=cplan.logger)
+
+
+# ---------------------------------------------------------------------------
+# The index
+# ---------------------------------------------------------------------------
+
+class IndexBuildStats(NamedTuple):
+    """Out-of-core accounting from one :func:`build_index` run — the
+    index-side sibling of :class:`repro.core.pipeline.ChunkStats`; what the
+    acceptance tests use to prove the dataset never sat in one place."""
+    n_points: int          # rows encoded into the inverted lists
+    n_chunks: int          # chunks the encode pass consumed
+    max_chunk_points: int  # largest single streamed chunk (rows)
+    train_rows: int        # rows in the resident training sample
+    max_resident_rows: int  # peak resident rows: max(train sample,
+    #                         prefetch window of the encode stream)
+    prefetch: int          # chunks in flight at once (host→device buffer)
+    passes: int            # source passes: train prefix + encode
+    n_shards: int = 1      # device shards the encode pass ran over
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    """A built IVF/PQ index: the coarse quantizer, the per-subspace
+    codebooks, and padded dense inverted lists.
+
+    ``codes[cell, slot]`` holds the PQ code of the ``slot``-th member of
+    ``cell`` (zeros beyond ``counts[cell]``), ``ids[cell, slot]`` its
+    source row id (``-1`` beyond the count).  All arrays are device
+    residents; the whole structure is ``8 + m`` bytes per indexed vector
+    plus the padding slack.
+    """
+    spec: IndexSpec
+    coarse_centers: Array   # (nlist, d) f32
+    codebooks: Array        # (m, C, d/m) f32
+    codes: Array            # (nlist, cap, m) uint8
+    ids: Array              # (nlist, cap) int32, -1 = empty slot
+    counts: Array           # (nlist,) int32
+
+    @property
+    def nlist(self) -> int:
+        return int(self.coarse_centers.shape[0])
+
+    @property
+    def dim(self) -> int:
+        return int(self.coarse_centers.shape[1])
+
+    @property
+    def cap(self) -> int:
+        """Inverted-list slot capacity (the largest cell's size)."""
+        return int(self.codes.shape[1])
+
+    @property
+    def n_points(self) -> int:
+        return int(jnp.sum(self.counts))
+
+    @property
+    def n_nonempty(self) -> int:
+        return int(jnp.sum(self.counts > 0))
+
+    def search(self, queries: Array, k: int = 10, *,
+               nprobe: Optional[int] = None,
+               scan_backend: Optional[str] = None,
+               q_block: int = QUERY_BLOCK,
+               logger: "RunLogger | str | None" = None
+               ) -> tuple[Array, Array]:
+        """Batched ANN query — see :func:`search`."""
+        return search(self, queries, k, nprobe=nprobe,
+                      scan_backend=scan_backend, q_block=q_block,
+                      logger=logger)
+
+    def __repr__(self):
+        return (f"<IVFIndex nlist={self.nlist} d={self.dim} "
+                f"m={self.spec.pq.n_subspaces} bits={self.spec.pq.bits} "
+                f"n={self.n_points} cap={self.cap}>")
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def _prefix_sample(src: DataSource, n_rows: int,
+                   chunk_points: int) -> np.ndarray:
+    """The first ``n_rows`` rows of the source — the same rows whatever
+    ``chunk_points`` the stream arrives in, which is what makes out-of-core
+    and in-memory builds train identical quantizers."""
+    parts, have = [], 0
+    for chunk in src.chunks(chunk_points):
+        chunk = np.asarray(chunk)
+        take = min(n_rows - have, chunk.shape[0])
+        if take:
+            parts.append(chunk[:take])
+            have += take
+        if have >= n_rows:
+            break
+    if not parts:
+        raise ValueError("build_index: the source yielded no rows")
+    return parts[0] if len(parts) == 1 else np.concatenate(parts, axis=0)
+
+
+@functools.lru_cache(maxsize=8)
+def _encoder(backend: LloydBackend):
+    """Jitted per-chunk encode for one backend: blocked coarse assignment
+    (the ``predict``-style bounded path) + blocked PQ residual encode.
+    Cached per backend so every chunk of a build reuses one trace per
+    chunk shape."""
+    @jax.jit
+    def enc(x, centers, codebooks):
+        idx, _ = backend.assign_points(x, centers, block=ENCODE_BLOCK)
+        resid = x.astype(jnp.float32) - centers[idx]
+        return idx, encode_residuals(resid, codebooks, block=ENCODE_BLOCK)
+    return enc
+
+
+def _assemble_lists(cells: np.ndarray, codes: np.ndarray, nlist: int
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Scatter stream-ordered (cells, codes) into padded dense inverted
+    lists; returns ``(list_codes, list_ids, counts)``."""
+    n, m = codes.shape
+    counts = np.bincount(cells, minlength=nlist).astype(np.int32)
+    cap = max(1, int(counts.max())) if n else 1
+    list_codes = np.zeros((nlist, cap, m), np.uint8)
+    list_ids = np.full((nlist, cap), -1, np.int32)
+    if n:
+        order = np.argsort(cells, kind="stable")
+        starts = np.zeros(nlist + 1, np.int64)
+        starts[1:] = np.cumsum(counts)
+        sorted_cells = cells[order]
+        slots = np.arange(n) - starts[sorted_cells]
+        list_codes[sorted_cells, slots] = codes[order]
+        list_ids[sorted_cells, slots] = order
+    return list_codes, list_ids, counts
+
+
+def build_index(source, spec: IndexSpec, key: Optional[Array] = None, *,
+                mesh: Optional[jax.sharding.Mesh] = None,
+                logger: "RunLogger | str | None" = None
+                ) -> tuple[IVFIndex, IndexBuildStats]:
+    """Build an IVF/PQ index from any array or
+    :class:`~repro.data.source.DataSource` (see the module docstring for
+    the two-pass dataflow).  Returns ``(index, IndexBuildStats)``.
+
+    With ``mesh`` the encode pass splits the source into one shard per
+    mesh device (``source.shard(i, n)``), each prefetching onto and
+    encoding on its own device; ids are assigned shard-major, which for
+    contiguous-range shards (``ArraySource``) equals source row order.
+    """
+    src = as_source(source)
+    iplan = plan_index(spec, src.shape, mesh=mesh, source=src,
+                       logger=logger)
+    log = iplan.logger
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    k_coarse, k_pq = jax.random.split(key)
+    chunk_points = spec.coarse.chunk.chunk_points
+    prefetch = spec.coarse.chunk.prefetch
+
+    with log.timer("index_build", nlist=spec.nlist,
+                   n_subspaces=spec.pq.n_subspaces, bits=spec.pq.bits):
+        # -- pass 1: train coarse quantizer + codebooks on the prefix ------
+        with log.timer("index_train_sample", budget=spec.train_points):
+            train = _prefix_sample(src, spec.train_points, chunk_points)
+        train_j = jnp.asarray(train, jnp.float32)
+        # re-plan against the sample actually collected (sources with
+        # unknown n_points may yield fewer rows than the budget)
+        cplan = plan(spec.coarse, tuple(train_j.shape), logger=log)
+        with log.timer("index_train_coarse", nlist=spec.nlist,
+                       rows=int(train_j.shape[0])):
+            res = execute(cplan, train_j, k_coarse)
+            centers = res.centers.astype(jnp.float32)
+        with log.timer("index_train_pq", n_subspaces=spec.pq.n_subspaces,
+                       n_codes=spec.pq.n_codes):
+            cells_t, _ = cplan.backend.assign_points(train_j, centers,
+                                                     block=ENCODE_BLOCK)
+            codebooks = train_codebooks(train_j - centers[cells_t],
+                                        spec.pq, k_pq,
+                                        backend=cplan.backend)
+            codebooks = jax.block_until_ready(codebooks)
+
+        # -- pass 2: stream-encode every row -------------------------------
+        enc = _encoder(cplan.backend)
+        devices = (list(mesh.devices.flat) if mesh is not None else [None])
+        n_shards = len(devices)
+        n_chunks = 0
+        max_chunk = 0
+        with log.timer("index_encode", n_shards=n_shards):
+            if n_shards == 1:
+                streams = [prefetch_to_device(src.chunks(chunk_points),
+                                              prefetch)]
+                params = [(centers, codebooks)]
+            else:
+                streams = [
+                    prefetch_to_device(
+                        src.shard(i, n_shards).chunks(chunk_points),
+                        prefetch, device=dev)
+                    for i, dev in enumerate(devices)]
+                params = [(jax.device_put(centers, dev),
+                           jax.device_put(codebooks, dev))
+                          for dev in devices]
+            shard_parts: list[list] = [[] for _ in range(n_shards)]
+            meter = log.rate("index_encode_rate", units="points")
+            live = list(range(n_shards))
+            while live:
+                # one chunk per live shard per round: dispatches are async,
+                # so the devices encode concurrently
+                batch = []
+                for i in list(live):
+                    chunk = next(streams[i], None)
+                    if chunk is None:
+                        live.remove(i)
+                        continue
+                    batch.append((i, int(chunk.shape[0]),
+                                  enc(chunk, *params[i])))
+                for i, rows, (idx, codes) in batch:
+                    shard_parts[i].append((np.asarray(idx),
+                                           np.asarray(codes)))
+                    n_chunks += 1
+                    max_chunk = max(max_chunk, rows)
+                    meter.tick(rows, shard=i)
+        all_parts = [p for parts in shard_parts for p in parts]
+        cells = np.concatenate([c for c, _ in all_parts])
+        codes = np.concatenate([q for _, q in all_parts])
+
+        with log.timer("index_assemble", nlist=spec.nlist):
+            list_codes, list_ids, counts = _assemble_lists(
+                cells, codes, spec.nlist)
+
+    stats = IndexBuildStats(
+        n_points=int(cells.shape[0]),
+        n_chunks=n_chunks,
+        max_chunk_points=max_chunk,
+        train_rows=int(train_j.shape[0]),
+        max_resident_rows=max(int(train_j.shape[0]),
+                              min(max_chunk * prefetch,
+                                  int(cells.shape[0]))),
+        prefetch=prefetch,
+        passes=2,
+        n_shards=n_shards,
+    )
+    log.event("index_built", **stats._asdict())
+    index = IVFIndex(spec=spec,
+                     coarse_centers=centers,
+                     codebooks=codebooks,
+                     codes=jnp.asarray(list_codes),
+                     ids=jnp.asarray(list_ids),
+                     counts=jnp.asarray(counts))
+    return index, stats
+
+
+# ---------------------------------------------------------------------------
+# Query
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("nprobe",))
+def _probe_cells(queries: Array, coarse_centers: Array, nprobe: int
+                 ) -> Array:
+    """Route each query to its ``nprobe`` nearest coarse cells."""
+    d2 = pairwise_sqdist(queries.astype(jnp.float32), coarse_centers)
+    _, cells = jax.lax.top_k(-d2, nprobe)
+    return cells.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "scan_backend"))
+def _scan_probed(queries: Array, cells: Array, coarse_centers: Array,
+                 codebooks: Array, codes: Array, ids: Array, counts: Array,
+                 k: int, scan_backend: str) -> tuple[Array, Array]:
+    """ADC-scan the probed cells' candidate lists and keep the top ``k``.
+
+    Invalid slots (``slot >= counts[cell]``) scan to ``+inf`` and resolve
+    to id ``-1`` — a probe set with fewer than ``k`` real candidates
+    (empty cells, tiny indexes) pads rather than fabricates."""
+    q, p = cells.shape
+    nlist, cap, m = codes.shape
+    c = codebooks.shape[1]
+    luts = build_luts(queries, cells, coarse_centers, codebooks)
+    dists = adc_scan(luts.reshape(q * p, m, c),
+                     codes[cells].reshape(q * p, cap, m),
+                     backend=scan_backend)
+    dists = dists.reshape(q, p, cap)
+    valid = jnp.arange(cap)[None, None, :] < counts[cells][:, :, None]
+    dists = jnp.where(valid, dists, jnp.inf)
+    flat_d = dists.reshape(q, p * cap)
+    flat_i = ids[cells].reshape(q, p * cap)
+    kk = min(k, p * cap)
+    neg, pos = jax.lax.top_k(-flat_d, kk)
+    out_d = -neg
+    out_i = jnp.where(jnp.isfinite(out_d),
+                      jnp.take_along_axis(flat_i, pos, axis=1), -1)
+    if kk < k:
+        out_d = jnp.pad(out_d, ((0, 0), (0, k - kk)),
+                        constant_values=jnp.inf)
+        out_i = jnp.pad(out_i, ((0, 0), (0, k - kk)), constant_values=-1)
+    return out_d, out_i
+
+
+def search(index: IVFIndex, queries: Array, k: int = 10, *,
+           nprobe: Optional[int] = None,
+           scan_backend: Optional[str] = None,
+           q_block: int = QUERY_BLOCK,
+           logger: "RunLogger | str | None" = None
+           ) -> tuple[Array, Array]:
+    """Batched ANN query: ``(Q, d)`` queries -> ``((Q, k) f32 approximate
+    squared distances, (Q, k) int32 ids)``, nearest first.
+
+    Two jitted stages per ``q_block`` of queries — **probe** (route to the
+    ``nprobe`` nearest cells) and **scan** (per-(query, cell) ADC LUTs +
+    the :func:`~repro.kernels.scan.adc_scan` kernel over the cells'
+    candidate slots) — instrumented with ``index_probe``/``index_scan``
+    timers and an ``index_query_rate`` meter on the given/registered
+    run logger.  Ids are ``-1`` (distance ``+inf``) past the real
+    candidates when the probed cells hold fewer than ``k`` points.
+
+    ``nprobe`` defaults to ``spec.nprobe``; larger probes trade latency
+    for recall.  ``scan_backend`` picks the ADC kernel
+    (jnp | pallas | auto/None — see ``REPRO_SCAN_BACKEND``).
+    """
+    log = get_run_logger(logger) if logger is not None else NULL
+    nprobe = index.spec.nprobe if nprobe is None else nprobe
+    if not 1 <= nprobe <= index.nlist:
+        raise ValueError(
+            f"search: nprobe={nprobe} out of range [1, nlist="
+            f"{index.nlist}]")
+    queries = jnp.asarray(queries)
+    if queries.ndim != 2 or queries.shape[1] != index.dim:
+        raise ValueError(
+            f"search: queries must be (Q, {index.dim}), got "
+            f"{tuple(queries.shape)}")
+    backend_name = resolve_scan_backend(scan_backend)
+    nq = queries.shape[0]
+    out_d, out_i = [], []
+    t0 = time.perf_counter()
+    with log.timer("index_search", queries=nq, k=k, nprobe=nprobe,
+                   scan_backend=backend_name):
+        for start in range(0, nq, q_block):
+            qb = queries[start:start + q_block]
+            with log.timer("index_probe", queries=int(qb.shape[0]),
+                           nprobe=nprobe):
+                cells = _probe_cells(qb, index.coarse_centers, nprobe)
+                if log is not NULL:
+                    cells.block_until_ready()
+            with log.timer("index_scan",
+                           candidates=nprobe * index.cap):
+                d, i = _scan_probed(qb, cells, index.coarse_centers,
+                                    index.codebooks, index.codes,
+                                    index.ids, index.counts, k,
+                                    backend_name)
+                if log is not NULL:
+                    d.block_until_ready()
+            out_d.append(d)
+            out_i.append(i)
+    if log is not NULL:
+        log.rate("index_query_rate", units="queries").tick(
+            nq, dur=time.perf_counter() - t0, k=k, nprobe=nprobe)
+    if len(out_d) == 1:
+        return out_d[0], out_i[0]
+    return jnp.concatenate(out_d), jnp.concatenate(out_i)
+
+
+# ---------------------------------------------------------------------------
+# Exact baseline + recall
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk(queries: Array, chunk: Array, offset, best_d: Array,
+                best_i: Array, k: int) -> tuple[Array, Array]:
+    d2 = pairwise_sqdist(queries, chunk.astype(jnp.float32))
+    ids = (offset + jnp.arange(chunk.shape[0], dtype=jnp.int32))
+    cat_d = jnp.concatenate([best_d, d2], axis=1)
+    cat_i = jnp.concatenate(
+        [best_i, jnp.broadcast_to(ids[None, :],
+                                  (queries.shape[0], ids.shape[0]))],
+        axis=1)
+    neg, pos = jax.lax.top_k(-cat_d, k)
+    return -neg, jnp.take_along_axis(cat_i, pos, axis=1)
+
+
+def exact_search(data, queries: Array, k: int = 10, *,
+                 chunk_points: int = 65536) -> tuple[Array, Array]:
+    """Brute-force exact k-NN baseline: streams any array/DataSource chunk
+    by chunk, folding a running ``(Q, k)`` top-k — the ``min_sqdist``-style
+    bounded-memory ground truth the recall benchmarks compare against.
+    Returns ``((Q, k) f32 distances, (Q, k) int32 ids)``, nearest first.
+
+    For sources whose *contents* depend on the traversal chunk size
+    (``SyntheticSource`` draws chunk ``i``'s rows from ``(seed, i)``), pass
+    the same ``chunk_points`` the index was built with — otherwise the two
+    traversals describe different corpora and ids cannot line up.  Resident
+    arrays and restartable iterators are chunking-invariant."""
+    src = as_source(data)
+    q = jnp.asarray(queries, jnp.float32)
+    best_d = jnp.full((q.shape[0], k), jnp.inf, jnp.float32)
+    best_i = jnp.full((q.shape[0], k), -1, jnp.int32)
+    offset = 0
+    for chunk in src.chunks(chunk_points):
+        chunk = jnp.asarray(chunk)
+        best_d, best_i = _merge_topk(q, chunk, jnp.int32(offset),
+                                     best_d, best_i, k)
+        offset += int(chunk.shape[0])
+    if offset == 0:
+        raise ValueError("exact_search: the source yielded no rows")
+    return best_d, best_i
+
+
+def recall_at_k(found_ids, true_ids) -> float:
+    """Fraction of true neighbors recovered: ``|found ∩ true| / |true|``
+    averaged over queries (ids ``< 0`` in ``true_ids`` — padding — are
+    excluded from the denominator)."""
+    found = np.asarray(found_ids)
+    true = np.asarray(true_ids)
+    valid = true >= 0
+    hits = (true[:, :, None] == found[:, None, :]).any(axis=2) & valid
+    denom = np.maximum(valid.sum(), 1)
+    return float(hits.sum() / denom)

@@ -1,0 +1,179 @@
+"""Declarative IVF/PQ index specification — `ClusterSpec`, composed.
+
+An IVF index *is* the paper's pipeline run for a different consumer: the
+coarse quantizer is a :class:`~repro.core.spec.ClusterSpec` job (partition →
+local k-means → merge), the inverted lists are its assignment, and the
+per-subspace PQ codebooks are the local k-means stage re-applied once per
+subspace.  :class:`IndexSpec` therefore *contains* a ``ClusterSpec`` rather
+than re-spelling any of its options:
+
+    spec = IndexSpec.make(nlist=256, n_subspaces=16, bits=8, nprobe=8)
+    index, stats = build_index(source, spec)
+    dists, ids = index.search(queries, k=10)
+
+Like ``ClusterSpec``, an ``IndexSpec`` is frozen/hashable (jit-static),
+JSON round-trips through ``to_dict``/``from_dict``, and is validated
+fail-fast by :func:`plan_index` — shape-dependent constraints (``d %
+n_subspaces``) the moment the data's dimensionality is known, registry and
+range constraints immediately.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping, Optional
+
+from repro.core.spec import ClusterSpec
+
+_PQ_BITS = (4, 8)
+
+
+@dataclasses.dataclass(frozen=True)
+class PQSpec:
+    """Product-quantization layout: ``d`` dims split into ``n_subspaces``
+    blocks of ``d / n_subspaces`` dims, each encoded against its own
+    ``2**bits``-entry codebook (trained on coarse *residuals* — the PQ
+    standard that keeps quantization error far below neighbor gaps).
+
+    ``iters`` is the Lloyd budget of each per-subspace codebook fit;
+    ``bits`` must be 4 or 8 (codes are stored as uint8 either way — 4-bit
+    codebooks trade recall for a 16-entry LUT that stays in registers).
+    """
+    n_subspaces: int = 16
+    bits: int = 8
+    iters: int = 10
+
+    def __post_init__(self):
+        if self.n_subspaces < 1:
+            raise ValueError(
+                f"PQSpec: n_subspaces must be >= 1, got {self.n_subspaces}")
+        if self.bits not in _PQ_BITS:
+            raise ValueError(
+                f"PQSpec: bits must be one of {_PQ_BITS}, got {self.bits}")
+        if self.iters < 1:
+            raise ValueError(f"PQSpec: iters must be >= 1, got {self.iters}")
+
+    @property
+    def n_codes(self) -> int:
+        """Codebook entries per subspace (``2**bits``)."""
+        return 1 << self.bits
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexSpec:
+    """The full IVF/PQ job: a coarse-quantizer ``ClusterSpec`` (its
+    ``merge.k`` is the cell count ``nlist``), the PQ layout, the default
+    probe width, and the training-sample budget.
+
+    ``train_points`` bounds the rows the coarse quantizer and the PQ
+    codebooks train on: the build takes the *first* ``train_points`` rows
+    of the source (a chunking-invariant prefix — the same rows whatever
+    chunk size streams them), so an out-of-core build trains the identical
+    quantizer as an in-memory build of the same data.  ``nprobe`` is the
+    default number of cells a query scans; ``search`` can override it per
+    call (quality/latency dial), bounded by ``nlist``.
+    """
+    coarse: ClusterSpec
+    pq: PQSpec = PQSpec()
+    nprobe: int = 8
+    train_points: int = 65536
+
+    def __post_init__(self):
+        if self.nprobe < 1:
+            raise ValueError(
+                f"IndexSpec: nprobe must be >= 1, got {self.nprobe}")
+        if self.train_points < 1:
+            raise ValueError(
+                f"IndexSpec: train_points must be >= 1, got "
+                f"{self.train_points}")
+
+    @property
+    def nlist(self) -> int:
+        """Inverted-list (cell) count — the coarse quantizer's ``k``."""
+        return self.coarse.merge.k
+
+    # -- flat-kwargs bridge ----------------------------------------------
+    @classmethod
+    def make(cls, nlist: int, *, n_subspaces: int = 16, bits: int = 8,
+             pq_iters: int = 10, nprobe: int = 8,
+             train_points: int = 65536, init: str = "kmeans++",
+             merge_init: Optional[str] = None,
+             **coarse_kwargs) -> "IndexSpec":
+        """Build an index spec from flat kwargs.  ``nlist`` and any extra
+        ``coarse_kwargs`` go to :meth:`ClusterSpec.make`; the coarse merge
+        stage — the k-means that actually places the ``nlist`` cell
+        centers — defaults to **kmeans|| seeding** (Scalable K-Means++,
+        Bahmani et al.): at index scale ``nlist`` is large and the merge
+        pool is wide, exactly the regime where k-means||'s
+        oversample-then-reduce beats ``k`` sequential D² draws.  Pass
+        ``merge_init=`` to override.
+        """
+        coarse = ClusterSpec.make(nlist, init=init,
+                                  merge_init=merge_init or "kmeans||",
+                                  **coarse_kwargs)
+        return cls(coarse=coarse,
+                   pq=PQSpec(n_subspaces=n_subspaces, bits=bits,
+                             iters=pq_iters),
+                   nprobe=nprobe, train_points=train_points)
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {
+            "coarse": self.coarse.to_dict(),
+            "pq": dataclasses.asdict(self.pq),
+            "nprobe": self.nprobe,
+            "train_points": self.train_points,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "IndexSpec":
+        d = dict(d)
+        coarse = ClusterSpec.from_dict(d.pop("coarse"))
+        pq = dict(d.pop("pq", {}))
+        known = {f.name for f in dataclasses.fields(PQSpec)}
+        unknown = set(pq) - known
+        if unknown:
+            raise ValueError(
+                f"IndexSpec.from_dict: unknown pq keys {sorted(unknown)}; "
+                f"known: {sorted(known)}")
+        kwargs = {}
+        for name in ("nprobe", "train_points"):
+            if name in d:
+                kwargs[name] = d.pop(name)
+        if d:
+            raise ValueError(
+                f"IndexSpec.from_dict: unknown top-level keys {sorted(d)}")
+        return cls(coarse=coarse, pq=PQSpec(**pq), **kwargs)
+
+    def stable_hash(self) -> str:
+        """Content hash of the algorithmic sections — the coarse spec's
+        ``stable_hash`` convention lifted one level: the coarse execution
+        section is excluded (same index on two engines shares a hash);
+        ``nprobe`` is *included* because it changes what a query computes
+        (recall), not just where."""
+        import hashlib
+        import json as _json
+        d = self.to_dict()
+        d["coarse"].pop("execution", None)
+        blob = _json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+    def replace(self, **kwargs) -> "IndexSpec":
+        """Top-level fields replace directly; PQ fields reach into ``pq``;
+        anything else is delegated to ``coarse.replace`` (which resolves
+        ``ClusterSpec`` field names one level down)."""
+        top = {f.name for f in dataclasses.fields(IndexSpec)}
+        pq_fields = {f.name for f in dataclasses.fields(PQSpec)}
+        updates: dict[str, Any] = {}
+        coarse_kwargs: dict[str, Any] = {}
+        for name, value in kwargs.items():
+            if name in top:
+                updates[name] = value
+            elif name in pq_fields:
+                pq = updates.get("pq", self.pq)
+                updates["pq"] = dataclasses.replace(pq, **{name: value})
+            else:
+                coarse_kwargs[name] = value
+        if coarse_kwargs:
+            base = updates.get("coarse", self.coarse)
+            updates["coarse"] = base.replace(**coarse_kwargs)
+        return dataclasses.replace(self, **updates)

@@ -4,6 +4,7 @@
   centroid.py  — weighted centroid update (one-hot MXU segment-sum)
   lloyd.py     — FUSED Lloyd step: assignment + weighted accumulation + SSE
                  in one pass over x (see repro.core.backend for selection)
+  scan.py      — ADC lookup-table scan for IVF/PQ queries (repro.index)
   cluster_attn.py — decode attention over clustered KV centroids
   ops.py       — jit'd public wrappers (padding, dtype plumbing)
   ref.py       — pure-jnp oracles
@@ -27,6 +28,8 @@ def default_interpret() -> bool:
 
 from .ops import (assign_argmin, centroid_update, cluster_attn_decode,
                   lloyd_step, pad_to, pallas_assign_fn)  # noqa: E402
+from .scan import adc_scan, resolve_scan_backend  # noqa: E402
 
 __all__ = ["default_interpret", "assign_argmin", "centroid_update",
-           "cluster_attn_decode", "lloyd_step", "pad_to", "pallas_assign_fn"]
+           "cluster_attn_decode", "lloyd_step", "pad_to", "pallas_assign_fn",
+           "adc_scan", "resolve_scan_backend"]

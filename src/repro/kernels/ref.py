@@ -38,6 +38,18 @@ def lloyd_step_ref(
     return sums, counts, sse, idx, mind
 
 
+def adc_scan_ref(luts: jax.Array, codes: jax.Array) -> jax.Array:
+    """Oracle for the ADC scan: (B, m, C) LUTs + (B, L, m) codes ->
+    (B, L) f32 candidate distances, via explicit per-subspace one-hot
+    contractions (deliberately a different formulation than both the
+    production gather path and the Pallas kernel)."""
+    luts = luts.astype(jnp.float32)
+    b, m, c = luts.shape
+    onehot = jax.nn.one_hot(codes.astype(jnp.int32), c,
+                            dtype=jnp.float32)            # (B, L, m, C)
+    return jnp.einsum("blmc,bmc->bl", onehot, luts)
+
+
 def cluster_attn_decode_ref(
     q: jax.Array,        # (h, dh)
     kc: jax.Array,       # (hkv, n, dh) centroid keys

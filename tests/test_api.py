@@ -198,6 +198,17 @@ def test_predict_score_transform_consistent(dataset):
                                rtol=1e-5)
 
 
+def test_predict_blocked_matches_dense(dataset):
+    """``predict(block=...)`` bounds the working set to O(block · k) but
+    the labels are bit-for-bit the dense path's, ragged tail included."""
+    x, _ = dataset
+    est = SampledKMeans(SPEC).fit(x, key=jax.random.PRNGKey(0))
+    dense = np.asarray(est.predict(x, block=None))
+    for block in (100, 257, len(x), 4 * len(x)):
+        np.testing.assert_array_equal(
+            np.asarray(est.predict(x, block=block)), dense)
+
+
 def test_unfitted_estimator_raises(dataset):
     x, _ = dataset
     with pytest.raises(RuntimeError, match="fit"):

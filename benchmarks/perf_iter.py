@@ -22,7 +22,7 @@ import os
 import sys
 
 if ("--lloyd" not in sys.argv and "--api" not in sys.argv
-        and "--levels" not in sys.argv):
+        and "--levels" not in sys.argv and "--stop" not in sys.argv):
     # the roofline cells pretend to be a 512-chip pod; the Lloyd bench wants
     # the real device so its timings mean something
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
@@ -375,8 +375,108 @@ def run_levels_bench(n: int, d: int, k: int, *, timing_iters: int = 3,
     return entry
 
 
+def run_stop_bench(n: int, d: int, k: int, *, tol: float = 1e-3,
+                   timing_iters: int = 3,
+                   max_sse_ratio: float = 1.01) -> dict:
+    """Convergence-driven stopping (``StopSpec(tol=...)``) vs the fixed
+    Lloyd budget on an easy-blobs workload.
+
+    Runs the same spec twice — once with the legacy fixed ``global_iters``
+    budget, once with a ``tol`` convergence criterion on both stages — and
+    records the merged-stage ``iters_run`` (read from the ``stage_iters``
+    telemetry of an eager fit), wall-clock for the jitted fit, and the SSE
+    ratio.  The point of the artifact: early exit must actually trigger
+    (``iters_run < iters_budget``) while quality stays within
+    ``max_sse_ratio`` of the fixed-budget answer.  Lands in
+    ``benchmarks/artifacts/BENCH_stop_N{n}_d{d}_K{k}.json`` and is gated
+    by ``benchmarks/gate.py`` (``iters_run`` / ``sse_ratio``).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import fit_from_spec
+    from repro.core.spec import ClusterSpec
+    from repro.data.synthetic import blobs
+    from repro.telemetry import RecordingLogger
+
+    fixed = ClusterSpec.make(k, n_sub=64, compression=5, local_iters=6,
+                             global_iters=25)
+    conv = ClusterSpec.make(k, n_sub=64, compression=5, local_iters=6,
+                            global_iters=25, tol=tol)
+    pts, _, _ = blobs(n, n_clusters=k, dim=d, seed=0)
+    x = jnp.asarray(pts)
+    key = jax.random.PRNGKey(0)
+
+    # eager instrumented run: the stage_iters events carry the true merge
+    # trip count (telemetry is host-side only, so numbers match the jitted
+    # fit bit-for-bit)
+    log = RecordingLogger()
+    fit_from_spec(x, conv, key, logger=log)
+    stage = {e["stage"]: e for e in log.events
+             if e.get("name") == "stage_iters"}
+    merge = stage["merge"]
+
+    def med(spec):
+        fit = jax.jit(fit_from_spec, static_argnames=("spec",))
+        sse = float(jax.block_until_ready(fit(x, spec, key).sse))  # warm
+        ts = []
+        for _ in range(timing_iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fit(x, spec, key).sse)
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts)), sse
+
+    t_fixed, sse_fixed = med(fixed)
+    t_stop, sse_stop = med(conv)
+    entry = {
+        "bench": "stop_convergence",
+        "shape": {"n": n, "d": d, "k": k},
+        "tol": tol,
+        "spec_hash_fixed": fixed.stable_hash(),
+        "spec_hash_stop": conv.stable_hash(),
+        "iters_budget": int(merge["iters_budget"]),
+        "iters_run": int(merge["iters_run"]),
+        "iters_saved": int(merge["iters_saved"]),
+        "fold_iters_run": int(stage["fold"]["iters_run"]),
+        "fold_iters_budget": int(stage["fold"]["iters_budget"]),
+        "us_fixed": t_fixed * 1e6,
+        "us_stop": t_stop * 1e6,
+        "speedup": t_fixed / t_stop,
+        "sse_fixed": sse_fixed,
+        "sse_stop": sse_stop,
+        "sse_ratio": sse_stop / sse_fixed,
+    }
+    PERF.parent.mkdir(parents=True, exist_ok=True)
+    out = PERF.parent / f"BENCH_stop_N{n}_d{d}_K{k}.json"
+    out.write_text(json.dumps(entry, indent=1))
+    entry["json"] = str(out)
+    assert entry["iters_run"] < entry["iters_budget"], (
+        f"tol={tol} never tripped early exit: merge ran "
+        f"{entry['iters_run']}/{entry['iters_budget']} iterations")
+    if max_sse_ratio is not None:
+        assert entry["sse_ratio"] <= max_sse_ratio, (
+            f"early-stopped SSE {entry['sse_ratio']:.4f}x fixed-budget "
+            f"(allowed {max_sse_ratio}x)")
+    return entry
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
+    if "--stop" in sys.argv:
+        ap.add_argument("--stop", action="store_true")
+        ap.add_argument("--n", type=int, default=200_000)
+        ap.add_argument("--d", type=int, default=8)
+        ap.add_argument("--k", type=int, default=64)
+        ap.add_argument("--tol", type=float, default=1e-3)
+        ap.add_argument("--timing-iters", type=int, default=3)
+        ap.add_argument("--max-sse-ratio", type=float, default=1.01,
+                        help="assert early-stopped SSE <= this x fixed")
+        args = ap.parse_args()
+        e = run_stop_bench(args.n, args.d, args.k, tol=args.tol,
+                           timing_iters=args.timing_iters,
+                           max_sse_ratio=args.max_sse_ratio)
+        print(json.dumps(e, indent=1))
+        sys.exit(0)
     if "--levels" in sys.argv:
         ap.add_argument("--levels", action="store_true")
         ap.add_argument("--n", type=int, default=200_000)

@@ -118,6 +118,17 @@ def normalize(record, source: str = "<mem>") -> list:
         return [_point(_key(name, "single", "auto"), bench, name,
                        metrics, record, source)]
 
+    if bench == "stop_convergence":
+        sh = record.get("shape") or {}
+        name = "stop_N{n}_d{d}_K{k}".format(
+            n=sh.get("n", "?"), d=sh.get("d", "?"), k=sh.get("k", "?"))
+        metrics = {m: float(record[m])
+                   for m in ("sse_ratio", "iters_run", "iters_saved",
+                             "speedup", "us_fixed", "us_stop")
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(name, "single", "auto"), bench, name,
+                       metrics, record, source)]
+
     if bench == "hierarchical_levels":
         sh = record.get("shape") or {}
         name = "levels_N{n}_d{d}_K{k}".format(

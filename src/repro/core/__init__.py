@@ -40,7 +40,7 @@ from .pipeline import (ChunkStats, SampledClusteringResult, chunk_fold,
                        minmax_pass, reduce_pool, sampled_kmeans, scale_pass,
                        sse_pass, standard_kmeans)
 from .spec import (ChunkSpec, ClusterSpec, ExecutionSpec, LevelSpec,
-                   LocalSpec, MergeSpec, PartitionSpec)
+                   LocalSpec, MergeSpec, PartitionSpec, StopSpec)
 from .subcluster import (Partition, available_partitioners, equal_partition,
                          feature_scale, gather_partitions, get_partitioner,
                          register_partitioner, unequal_landmarks,
@@ -51,7 +51,7 @@ from .distributed import (ChunkDistStats, DistributedClusteringResult,
 
 __all__ = [
     "ClusterSpec", "PartitionSpec", "LocalSpec", "MergeSpec",
-    "ExecutionSpec", "LevelSpec", "ChunkSpec",
+    "ExecutionSpec", "LevelSpec", "ChunkSpec", "StopSpec",
     "ChunkStats", "chunk_fold", "merge_pool", "fit_chunked", "scale_pass",
     "minmax_pass", "sse_pass", "min_sqdist", "map_row_blocks",
     "ChunkDistStats", "fit_chunked_dist", "merge_pool_distributed",

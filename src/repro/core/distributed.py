@@ -40,13 +40,14 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 
 from .backend import BackendSpec, LloydBackend, get_backend
-from .kmeans import kmeans, pairwise_sqdist
+from .kmeans import _centers_from_stats, _stop_update, kmeans, \
+    pairwise_sqdist
 from .pipeline import (SampledClusteringResult, _CHUNK_KEY_OFFSET,
                        _SHARD_KEY_OFFSET, _PoolAccumulator,
-                       _fold_scaled_chunk, merge_pool, minmax_pass,
-                       reduce_pool, sse_pass)
+                       _fold_scaled_chunk, _log_stage_iters, merge_pool,
+                       minmax_pass, reduce_pool, sse_pass)
 from .metrics import sse as sse_fn
-from .spec import ClusterSpec
+from .spec import ClusterSpec, StopSpec
 from .subcluster import gather_partitions, get_partitioner, unscale
 
 _now = time.perf_counter
@@ -74,16 +75,23 @@ def _distributed_merge(
     local_centers: Array,    # per-device (n_local, d)
     local_w: Array,          # per-device (n_local,)
     k: int,
-    iters: int,
+    stop: StopSpec,
     key: Array,
     axis: str,
     backend: LloydBackend,
-) -> Array:
+) -> tuple[Array, Array]:
     """Merge-stage k-means with the *points* (= local centers) left sharded.
 
     Each Lloyd round: one ``backend.step`` over this device's centers (raw
     weighted sums/counts — with the fused backend that is a single pass and
-    no HBM one-hot), one psum of (k*d + k) floats, replicated update.
+    no HBM one-hot), one psum of (k*d + k + 1) floats, replicated update.
+    ``stop`` is the iteration contract: ``tol=0`` keeps the static
+    fixed-trip ``fori_loop`` (bit-for-bit the pre-StopSpec path);
+    ``tol>0`` runs a ``while_loop`` whose convergence scalar is the
+    *psum'd* global SSE — identical on every device, so all devices take
+    the same trip count and the collective schedule stays in lockstep.
+    (``stop.minibatch`` does not apply here; the replicated merge path
+    supports it.)  Returns ``(centers, n_iter)``, both replicated.
     """
     # Replicated init: gather a candidate pool and run greedy farthest-point
     # (k-center) selection — identical on every device (the key is
@@ -124,14 +132,40 @@ def _distributed_merge(
 
     prep = backend.prepare(local_centers, local_w)  # pad once, not per round
 
-    def body(_, centers):
-        sums, counts, _ = backend.step(prep, centers)
+    if stop.tol <= 0:
+        # static path: the pre-StopSpec trace, bit for bit
+        def body(_, centers):
+            sums, counts, _ = backend.step(prep, centers)
+            sums = jax.lax.psum(sums, axis)
+            counts = jax.lax.psum(counts, axis)
+            new = (sums / jnp.maximum(counts, 1e-12)[:, None]).astype(
+                centers.dtype)
+            return jnp.where((counts <= 0)[:, None], centers, new)
+
+        centers = jax.lax.fori_loop(0, stop.max_iters, body, centers0)
+        return centers, jnp.asarray(stop.max_iters, jnp.int32)
+
+    def cond(carry):
+        i, _, _, _, done = carry
+        return (i < stop.max_iters) & jnp.logical_not(done)
+
+    def wl_body(carry):
+        i, centers, prev_sse, streak, _ = carry
+        sums, counts, sse = backend.step(prep, centers)
         sums = jax.lax.psum(sums, axis)
         counts = jax.lax.psum(counts, axis)
-        new = (sums / jnp.maximum(counts, 1e-12)[:, None]).astype(centers.dtype)
-        return jnp.where((counts <= 0)[:, None], centers, new)
+        sse = jax.lax.psum(sse.astype(jnp.float32), axis)  # global scalar
+        new = _centers_from_stats(sums, counts, centers)
+        streak, done = _stop_update(
+            stop, sse=sse, prev_sse=prev_sse, new_centers=new,
+            old_centers=centers, i=i, streak=streak)
+        return i + 1, new, sse, streak, done
 
-    return jax.lax.fori_loop(0, iters, body, centers0)
+    carry0 = (jnp.asarray(0, jnp.int32), centers0,
+              jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    n_iter, centers, _, _, _ = jax.lax.while_loop(cond, wl_body, carry0)
+    return centers, n_iter
 
 
 def make_distributed_sampled_kmeans(
@@ -182,8 +216,8 @@ def make_distributed_sampled_kmeans(
         n_sub_per_device = spec.partition.n_sub
         capacity_factor = spec.partition.capacity_factor
         compression = spec.local.compression
-        local_iters = spec.local.iters
-        global_iters = spec.merge.iters
+        local_stop = spec.local.effective_stop
+        global_stop = spec.merge.effective_stop
         weighted_merge = spec.merge.weighted
         # an explicit backend= (e.g. the planner's resolved instance)
         # outranks the spec's name, mirroring fit_from_spec
@@ -200,6 +234,8 @@ def make_distributed_sampled_kmeans(
         raise TypeError("make_distributed_sampled_kmeans: pass k or spec=")
     else:
         merge_init, restarts = "kmeans++", 4
+        local_stop = StopSpec(max_iters=local_iters)
+        global_stop = StopSpec(max_iters=global_iters)
     axis = axis or "data"
     merge = merge or "replicated"
     levels = () if levels is None else tuple(levels)
@@ -233,7 +269,7 @@ def make_distributed_sampled_kmeans(
         keys = jax.random.split(jax.random.fold_in(key_dev, 1),
                                 n_sub_per_device)
         local = jax.vmap(
-            lambda p, w, kk: kmeans(p, k_local, weights=w, iters=local_iters,
+            lambda p, w, kk: kmeans(p, k_local, weights=w, stop=local_stop,
                                     key=kk, init=init, backend=be)
         )(parts, part_w, keys)
 
@@ -258,15 +294,15 @@ def make_distributed_sampled_kmeans(
             # redundantly (the "host" stage, replicated instead of serial).
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
-            merged = kmeans(all_c, k, weights=all_w, iters=global_iters,
+            merged = kmeans(all_c, k, weights=all_w, stop=global_stop,
                             key=key_merge, init=merge_init,
                             backend=be,
                             restarts=restarts)  # same multi-seed guard as
                                                 # the batch merge stage
             centers = merged.centers
         elif merge == "distributed":
-            centers = _distributed_merge(lc, merge_w, k, global_iters,
-                                         key_merge, axis, be)
+            centers, _ = _distributed_merge(lc, merge_w, k, global_stop,
+                                            key_merge, axis, be)
             all_c = jax.lax.all_gather(lc, axis, tiled=True)
             all_w = jax.lax.all_gather(merge_w, axis, tiled=True)
         else:
@@ -356,8 +392,11 @@ def merge_pool_distributed(pools, pool_ws, spec: ClusterSpec,
     the candidate budget ``max(2k, 8)``, the strided candidate subsample
     sees the padded layout, so the padded merge is deterministic given
     the pool shapes rather than literally identical to an unpadded one.)
-    Returns the replicated ``(k, d)`` centers (in whatever space the
-    pools are in — the caller unscales)."""
+    Returns ``(centers, n_iter)``: the replicated ``(k, d)`` centers (in
+    whatever space the pools are in — the caller unscales) and the true
+    Lloyd round count (``spec.merge.effective_stop.max_iters`` under the
+    default ``tol=0`` policy; less when the psum'd convergence scalar
+    exits early)."""
     be = get_backend(backend if backend is not None
                      else spec.execution.backend)
     axis = spec.execution.mesh_axis
@@ -385,13 +424,13 @@ def merge_pool_distributed(pools, pool_ws, spec: ClusterSpec,
     sharding = jax.sharding.NamedSharding(mesh, P(axis))
     dc = jax.device_put(all_c, sharding)
     dw = jax.device_put(merge_w, sharding)
-    k, iters = spec.merge.k, spec.merge.iters
+    k, stop = spec.merge.k, spec.merge.effective_stop
     body = compat.shard_map(
-        lambda lc, lw, kk: _distributed_merge(lc, lw, k, iters, kk,
+        lambda lc, lw, kk: _distributed_merge(lc, lw, k, stop, kk,
                                               axis, be),
         mesh=mesh,
         in_specs=(P(axis), P(axis), P()),
-        out_specs=P(),
+        out_specs=(P(), P()),
         check_vma=False,
     )
     return jax.jit(body)(dc, dw, key)
@@ -499,6 +538,8 @@ def fit_chunked_dist(source, spec: ClusterSpec, mesh: jax.sharding.Mesh,
     dev_points = [0] * n_dev
     dev_chunks = [0] * n_dev
     max_chunk = 0
+    dev_iters = [None] * n_dev   # per-device true Lloyd-iteration counts
+    fold_budget = 0              # sum of max_iters budgets
     fold_rate = log.rate("fold_rate", units="points")
     with log.timer("fold", devices=n_dev):
         its = [iter(enumerate(prefetch_to_device(
@@ -526,10 +567,13 @@ def fit_chunked_dist(source, spec: ClusterSpec, mesh: jax.sharding.Mesh,
                 ck = (key_local if (i == 0 and j == 0)
                       else jax.random.fold_in(
                           key_local, (i + 1) * _CHUNK_KEY_OFFSET + j))
-                c, w, nd = _fold_scaled_chunk(chunk, lo_d[i], span_d[i], ck,
-                                              lv=lv, backend=be)
+                c, w, nd, ir = _fold_scaled_chunk(chunk, lo_d[i], span_d[i],
+                                                  ck, lv=lv, backend=be)
                 accs[i].add(c, w)
                 dropped[i] = nd if dropped[i] is None else dropped[i] + nd
+                dev_iters[i] = ir if dev_iters[i] is None \
+                    else dev_iters[i] + ir
+                fold_budget += lv.effective_stop.max_iters * lv.n_sub
                 dev_points[i] += m
                 dev_chunks[i] += 1
                 max_chunk = max(max_chunk, m)
@@ -581,13 +625,20 @@ def fit_chunked_dist(source, spec: ClusterSpec, mesh: jax.sharding.Mesh,
                 merge_pools.append(np.zeros((1, pool_np.shape[-1]),
                                             pool_np.dtype))
                 merge_ws.append(np.zeros((1,), pool_w_np.dtype))
-            centers = merge_pool_distributed(merge_pools, merge_ws, spec,
-                                             mesh, key_global, backend=be)
+            centers, merge_iters = merge_pool_distributed(
+                merge_pools, merge_ws, spec, mesh, key_global, backend=be)
         else:
             # replicated: host-gathered pool, eager merge — the same
             # merge_pool call fit_chunked makes (the 1-device parity pin)
-            centers = merge_pool(pool, pool_w, spec.merge, key_global,
-                                 backend=be).centers
+            merged = merge_pool(pool, pool_w, spec.merge, key_global,
+                                backend=be)
+            centers, merge_iters = merged.centers, merged.n_iter
+    if log is not NULL:
+        _log_stage_iters(log, "fold",
+                         sum(int(it) for it in dev_iters if it is not None),
+                         fold_budget)
+        _log_stage_iters(log, "merge", int(merge_iters),
+                         spec.merge.effective_stop.max_iters)
 
     local_centers = pool
     if spec.scale:

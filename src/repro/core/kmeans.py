@@ -21,8 +21,13 @@ import jax
 import jax.numpy as jnp
 
 from .backend import BackendSpec, LloydBackend, AssignFnBackend, get_backend
+from .spec import StopSpec
 
 Array = jax.Array
+
+# salt for deriving the mini-batch sampling stream from a run key, so the
+# init draw sees the exact same key it always did
+_MINIBATCH_SALT = 0x6D62
 
 
 class KMeansResult(NamedTuple):
@@ -248,31 +253,147 @@ def _jittered_array_init(init: Array, x: Array, key: Array,
 # Lloyd's algorithm
 # ---------------------------------------------------------------------------
 
+def _stop_update(stop: StopSpec, *, sse: Array, prev_sse: Array,
+                 new_centers: Array, old_centers: Array, i: Array,
+                 streak: Array) -> tuple[Array, Array]:
+    """Convergence bookkeeping for one Lloyd iteration under a ``tol>0``
+    policy: returns the updated consecutive-hit ``streak`` and the ``done``
+    flag.  ``sse`` is the backend step's convergence scalar (SSE measured
+    at ``old_centers``); ``prev_sse`` is the same scalar one iteration ago
+    (+inf on the first iteration, which therefore never converges)."""
+    if stop.metric == "rel_sse":
+        impr = (prev_sse - sse) / jnp.maximum(prev_sse, 1e-30)
+        hit = jnp.isfinite(prev_sse) & (impr <= stop.tol)
+    else:                                            # "center_shift"
+        shift2 = jnp.max(jnp.sum(
+            (new_centers.astype(jnp.float32)
+             - old_centers.astype(jnp.float32)) ** 2, axis=-1))
+        hit = jnp.sqrt(shift2) <= stop.tol
+    streak = jnp.where(hit, streak + 1, jnp.zeros_like(streak))
+    done = (streak >= stop.patience) & (i + 1 >= stop.min_iters)
+    return streak, done
+
+
+def _lloyd_converged(be: LloydBackend, prep, centers0: Array,
+                     stop: StopSpec) -> tuple[Array, Array]:
+    """Full-batch Lloyd under a ``tol>0`` policy: ``lax.while_loop`` with a
+    data-dependent exit.  Under vmap, JAX's while batching rule masks the
+    carry per lane (converged lanes freeze via ``select``) and the loop
+    runs until every lane is done — static shapes throughout.  Returns
+    ``(centers, n_iter)`` where ``n_iter`` is the per-lane true count."""
+    def cond(carry):
+        i, _, _, _, done = carry
+        return (i < stop.max_iters) & jnp.logical_not(done)
+
+    def body(carry):
+        i, centers, prev_sse, streak, _ = carry
+        sums, counts, sse = be.step(prep, centers)
+        sse = sse.astype(jnp.float32)
+        new = _centers_from_stats(sums, counts, centers)
+        streak, done = _stop_update(
+            stop, sse=sse, prev_sse=prev_sse, new_centers=new,
+            old_centers=centers, i=i, streak=streak)
+        return i + 1, new, sse, streak, done
+
+    carry0 = (jnp.asarray(0, jnp.int32), centers0,
+              jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    n_iter, centers, _, _, _ = jax.lax.while_loop(cond, body, carry0)
+    return centers, n_iter
+
+
+def _lloyd_minibatch(be: LloydBackend, x: Array, weights: Array,
+                     centers0: Array, stop: StopSpec,
+                     key: Array) -> tuple[Array, Array]:
+    """Mini-batch Lloyd (Sculley-style) for huge pools: each iteration
+    samples ``stop.minibatch`` rows weight-proportionally (with
+    replacement, unit sample weight — mass enters through the sampling
+    probabilities), runs one backend step on the block, and moves each
+    center toward its batch mean with the running cumulative-count
+    learning rate ``counts / cum_counts``.  ``tol>0`` early exit applies
+    to the (noisy) per-batch convergence scalar — raise ``patience`` to
+    taste; ``tol=0`` runs all ``max_iters`` batches."""
+    b = min(int(stop.minibatch), int(x.shape[0]))
+    logits = jnp.where(
+        weights > 0,
+        jnp.log(jnp.maximum(weights.astype(jnp.float32), 1e-30)), -jnp.inf)
+    ones = jnp.ones((b,), x.dtype)
+    k = centers0.shape[0]
+
+    def cond(carry):
+        i, _, _, _, _, done = carry
+        return (i < stop.max_iters) & jnp.logical_not(done)
+
+    def body(carry):
+        i, centers, cum_counts, prev_sse, streak, done = carry
+        kk = jax.random.fold_in(key, i)
+        ids = jax.random.categorical(kk, logits, shape=(b,))
+        sums, counts, sse = be.step(be.prepare(x[ids], ones), centers)
+        sse = sse.astype(jnp.float32)
+        cum_counts = cum_counts + counts
+        batch_mean = sums / jnp.maximum(counts, 1e-12)[:, None]
+        lr = (counts / jnp.maximum(cum_counts, 1e-12))[:, None]
+        stepped = ((1.0 - lr) * centers.astype(jnp.float32)
+                   + lr * batch_mean).astype(centers.dtype)
+        new = jnp.where((counts <= 0.0)[:, None], centers, stepped)
+        if stop.tol > 0:
+            streak, done = _stop_update(
+                stop, sse=sse, prev_sse=prev_sse, new_centers=new,
+                old_centers=centers, i=i, streak=streak)
+        return i + 1, new, cum_counts, sse, streak, done
+
+    carry0 = (jnp.asarray(0, jnp.int32), centers0,
+              jnp.zeros((k,), jnp.float32),
+              jnp.asarray(jnp.inf, jnp.float32),
+              jnp.asarray(0, jnp.int32), jnp.asarray(False))
+    n_iter, centers, _, _, _, _ = jax.lax.while_loop(cond, body, carry0)
+    return centers, n_iter
+
+
 def kmeans(
     x: Array,
     k: int,
     *,
     weights: Optional[Array] = None,
-    iters: int = 25,
+    iters: Optional[int] = None,
     key: Optional[Array] = None,
     init: str | Array = "kmeans++",
     backend: BackendSpec = None,
     assign_fn: Optional[AssignFn] = None,
     restarts: int = 1,
+    stop: Optional[StopSpec] = None,
 ) -> KMeansResult:
-    """Weighted Lloyd's k-means with a fixed iteration budget.
+    """Weighted Lloyd's k-means under a :class:`~repro.core.spec.StopSpec`
+    iteration contract.
 
-    A fixed ``iters`` (rather than convergence tests) keeps the computation a
-    static-trip-count ``fori_loop``: vmap-able across subclusters, shard_map
+    ``stop`` is the canonical way to bound the loop; ``iters`` survives as
+    a deprecated alias for ``StopSpec(max_iters=iters)`` (passing both
+    raises).  The default policy (``tol=0``) runs a *static*
+    trip-count ``fori_loop`` — vmap-able across subclusters, shard_map
     friendly, and — at pod scale — a straggler-mitigation device in itself
-    (every subcluster costs the same, no data-dependent tail).
+    (every subcluster costs the same, no data-dependent tail) — bit-for-bit
+    the historical fixed-``iters`` behavior.  ``stop.tol > 0`` switches to
+    a ``lax.while_loop`` that exits once the convergence metric
+    (relative SSE improvement or max center shift) stays at or below
+    ``tol`` for ``patience`` consecutive iterations; ``stop.minibatch > 0``
+    switches to sampled mini-batch center updates (meant for the merge
+    stage over huge pools).  ``KMeansResult.n_iter`` reports the number of
+    Lloyd iterations actually executed (of the best restart).
 
     ``backend`` selects the Lloyd machinery (see :mod:`repro.core.backend`);
-    ``assign_fn`` is the legacy hook, adapted onto the registry when given.
-    With ``restarts > 1`` the lowest-SSE of several independent runs wins;
-    an explicit array ``init`` participates too (restart 0 uses it verbatim,
+    its ``step`` already returns the SSE convergence scalar alongside the
+    raw stats, so the early-exit test costs no extra pass.  ``assign_fn``
+    is the legacy hook, adapted onto the registry when given.  With
+    ``restarts > 1`` the lowest-SSE of several independent runs wins; an
+    explicit array ``init`` participates too (restart 0 uses it verbatim,
     later restarts jitter it — see :func:`_jittered_array_init`).
     """
+    if stop is None:
+        stop = StopSpec(max_iters=25 if iters is None else iters)
+    elif iters is not None:
+        raise TypeError(
+            "kmeans: pass either stop= or the deprecated iters= alias, "
+            "not both")
     m = x.shape[0]
     if weights is None:
         weights = jnp.ones((m,), x.dtype)
@@ -293,38 +414,49 @@ def kmeans(
     prep = be.prepare(x, weights)   # pad ONCE, outside the Lloyd loop
     w32 = weights.astype(jnp.float32)
 
-    def lloyd(centers0):
-        def body(_, centers):
-            sums, counts, _ = be.step(prep, centers)
-            return _centers_from_stats(sums, counts, centers)
+    def lloyd(centers0, run_key):
+        if stop.minibatch > 0:
+            centers, n_iter = _lloyd_minibatch(
+                be, x, weights, centers0, stop,
+                jax.random.fold_in(run_key, _MINIBATCH_SALT))
+        elif stop.tol > 0:
+            centers, n_iter = _lloyd_converged(be, prep, centers0, stop)
+        else:
+            # static-trip path: the pre-StopSpec trace, bit for bit
+            def body(_, centers):
+                sums, counts, _ = be.step(prep, centers)
+                return _centers_from_stats(sums, counts, centers)
 
-        centers = jax.lax.fori_loop(0, iters, body, centers0)
+            centers = jax.lax.fori_loop(0, stop.max_iters, body, centers0)
+            n_iter = jnp.asarray(stop.max_iters, jnp.int32)
         idx, mind = be.assign(prep, centers)
         sse = jnp.sum(mind * w32)
-        return centers, idx, sse
+        return centers, idx, sse, n_iter
 
     def one_run(kk, r):
         if isinstance(init, str):
             centers0 = get_init(init)(x, weights, k, kk)
         else:
             centers0 = _jittered_array_init(init, x, kk, r)
-        return lloyd(centers0)
+        return lloyd(centers0, kk)
 
     if restarts <= 1:
-        centers, idx, sse = one_run(key, 0)
+        centers, idx, sse, n_iter = one_run(key, 0)
     else:
         # multi-seed restart: rerun Lloyd from independent inits, keep the
         # lowest-SSE solution (vmap'd so the restarts batch on device);
         # an array init restarts from jittered copies of itself (r=0 exact)
         keys = jax.random.split(key, restarts)
-        centers_r, idx_r, sse_r = jax.vmap(one_run)(keys, jnp.arange(restarts))
+        centers_r, idx_r, sse_r, n_iter_r = jax.vmap(one_run)(
+            keys, jnp.arange(restarts))
         best = jnp.argmin(sse_r)
         centers = jnp.take(centers_r, best, axis=0)
         idx = jnp.take(idx_r, best, axis=0)
         sse = jnp.take(sse_r, best, axis=0)
+        n_iter = jnp.take(n_iter_r, best, axis=0)
 
     counts = jnp.zeros((k,), weights.dtype).at[idx].add(weights)
-    return KMeansResult(centers, idx, sse, counts, jnp.asarray(iters))
+    return KMeansResult(centers, idx, sse, counts, n_iter)
 
 
 def kmeans_lloyd_step(

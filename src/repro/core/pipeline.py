@@ -39,7 +39,7 @@ _now = time.perf_counter
 from .backend import BackendSpec, get_backend
 from .kmeans import KMeansResult, kmeans
 from .metrics import sse as sse_fn
-from .spec import ClusterSpec, LevelSpec, MergeSpec
+from .spec import ClusterSpec, LevelSpec, MergeSpec, StopSpec
 from .subcluster import (Partition, feature_scale, gather_partitions,
                          get_partitioner, unscale)
 
@@ -76,30 +76,40 @@ def local_stage(
     part_w: Array,           # (P, cap)
     k_local: int,
     *,
-    iters: int,
+    iters: Optional[int] = None,
     key: Array,
     init: str = "kmeans++",
     backend: BackendSpec = None,
+    stop: Optional[StopSpec] = None,
 ) -> KMeansResult:
     """vmap'd per-partition k-means — the paper's "device part".  On the CUDA
     original each subcluster ran on one thread block; here each is one lane of
-    a vmap that shard_map spreads across the mesh."""
+    a vmap that shard_map spreads across the mesh.  ``stop`` is the canonical
+    iteration contract (``iters`` remains as the deprecated fixed-trip
+    alias); with ``stop.tol > 0`` each partition is one masked lane of a
+    batched ``while_loop`` — converged partitions freeze and the stage exits
+    once every lane is done.  The result's ``n_iter`` is the per-partition
+    ``(P,)`` true iteration count."""
     n_parts = parts.shape[0]
     keys = jax.random.split(key, n_parts)
     be = get_backend(backend)  # resolve once; vmap batches the prepared data
     return jax.vmap(
         lambda p, w, kk: kmeans(
             p, k_local, weights=w, iters=iters, key=kk, init=init,
-            backend=be)
+            backend=be, stop=stop)
     )(parts, part_w, keys)
 
 
 def chunk_fold(xs: Array, lv: LevelSpec, key: Array, *,
-               backend: BackendSpec = None) -> tuple[Array, Array, Array]:
+               backend: BackendSpec = None
+               ) -> tuple[Array, Array, Array, Array]:
     """Partition one (already feature-scaled) block of points and summarise
     it with the vmap'd local stage: ``(m, d)`` points ->
     ``(n_sub * k_local, d)`` weighted centers + ``(n_sub * k_local,)``
-    member counts + ``()`` dropped-point count (Algorithm 2 overflow).
+    member counts + ``()`` dropped-point count (Algorithm 2 overflow)
+    + ``()`` Lloyd iterations actually executed, summed over the
+    partitions (equals ``n_sub * max_iters`` under the default ``tol=0``
+    policy; less when ``lv.stop`` converges partitions early).
 
     This is the unit of work every executor folds over its data: the batch
     pipeline calls it once on the whole (scaled) array, the chunked
@@ -107,7 +117,8 @@ def chunk_fold(xs: Array, lv: LevelSpec, key: Array, *,
     engine's ``summarize_chunk`` wraps it in per-chunk feature scaling.
     The stage parameters arrive as a :class:`LevelSpec` (the base
     partition/local sections expressed in the reduce-tree vocabulary —
-    ``spec.level_schedule()[0]``).
+    ``spec.level_schedule()[0]``); its stopping policy is
+    ``lv.effective_stop``.
     """
     be = get_backend(backend)
     part: Partition = get_partitioner(lv.scheme)(xs, lv.n_sub,
@@ -115,12 +126,13 @@ def chunk_fold(xs: Array, lv: LevelSpec, key: Array, *,
     parts, part_w = gather_partitions(xs, part)
     cap = parts.shape[1]
     k_local = max(1, cap // lv.compression)
-    local = local_stage(parts, part_w, k_local, iters=lv.iters,
-                        key=key, init=lv.init, backend=be)
+    local = local_stage(parts, part_w, k_local, key=key, init=lv.init,
+                        backend=be, stop=lv.effective_stop)
     d = xs.shape[-1]
     return (local.centers.reshape(lv.n_sub * k_local, d),
             local.counts.reshape(lv.n_sub * k_local),
-            part.n_dropped)
+            part.n_dropped,
+            jnp.sum(local.n_iter).astype(jnp.int32))
 
 
 def merge_pool(pool: Array, pool_w: Array, merge: MergeSpec, key: Array, *,
@@ -130,11 +142,15 @@ def merge_pool(pool: Array, pool_w: Array, merge: MergeSpec, key: Array, *,
     ``merge.weighted`` weights each representative by its member count;
     otherwise every live (count > 0) representative votes equally, exactly
     as the paper merges.  Dead pool slots (count 0) carry no weight either
-    way."""
+    way.  The iteration contract is ``merge.effective_stop`` — including
+    the mini-batch option (``stop.minibatch`` sampled rows per step) for
+    huge pools; the result's ``n_iter`` is the true count of the winning
+    restart."""
     be = get_backend(backend)
     merge_w = (pool_w if merge.weighted
                else (pool_w > 0).astype(pool.dtype))
-    return kmeans(pool, merge.k, weights=merge_w, iters=merge.iters,
+    return kmeans(pool, merge.k, weights=merge_w,
+                  stop=merge.effective_stop,
                   key=key, init=merge.init, backend=be,
                   restarts=merge.restarts)
 
@@ -164,12 +180,24 @@ def reduce_pool(pool: Array, pool_w: Array, level: LevelSpec, key: Array,
     w_dropped = jnp.sum(pool_w).astype(jnp.float32) - \
         jnp.sum(part_w).astype(jnp.float32)
     k_local = max(1, parts.shape[1] // level.compression)
-    local = local_stage(parts, part_w, k_local, iters=level.iters, key=key,
-                        init=level.init, backend=be)
+    local = local_stage(parts, part_w, k_local, key=key,
+                        init=level.init, backend=be,
+                        stop=level.effective_stop)
     d = pool.shape[-1]
     return (local.centers.reshape(level.n_sub * k_local, d),
             local.counts.reshape(level.n_sub * k_local),
             jnp.maximum(w_dropped, 0.0))
+
+
+def _log_stage_iters(log, stage: str, iters_run: int,
+                     iters_budget: int) -> None:
+    """Telemetry for the convergence contract: how many Lloyd iterations a
+    stage actually executed vs its ``max_iters`` budget.  Host-side only —
+    callers guard with ``log is not NULL`` so unlogged runs never sync on
+    the device scalar."""
+    log.event("stage_iters", stage=stage, iters_run=iters_run,
+              iters_budget=iters_budget,
+              iters_saved=max(0, iters_budget - iters_run))
 
 
 def fit_from_spec(x: Array, spec: ClusterSpec,
@@ -215,9 +243,13 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
     # resident fit is literally the one-chunk schedule, so the out-of-core
     # parity pin holds by construction (for every dtype: sharing the trace
     # sidesteps jit-vs-eager bf16 rounding differences)
+    base = spec.level_schedule()[0]
     with log.timer("fold", rows=int(x.shape[0])):
-        local_centers, local_counts, n_dropped = _fold_scaled_chunk(
-            x, lo, span, key_local, lv=spec.level_schedule()[0], backend=be)
+        local_centers, local_counts, n_dropped, fold_iters = \
+            _fold_scaled_chunk(x, lo, span, key_local, lv=base, backend=be)
+    if log is not NULL:
+        _log_stage_iters(log, "fold", int(fold_iters),
+                         base.effective_stop.max_iters * base.n_sub)
 
     # hierarchical reduce tree: recursively re-partition the weighted center
     # pool until it is small enough for the merge stage (spec.levels is ()
@@ -237,6 +269,9 @@ def fit_from_spec(x: Array, spec: ClusterSpec,
                    k=spec.merge.k):
         merged = merge_pool(local_centers, local_counts, spec.merge,
                             key_global, backend=be)
+    if log is not NULL:
+        _log_stage_iters(log, "merge", int(merged.n_iter),
+                         spec.merge.effective_stop.max_iters)
 
     centers = merged.centers
     if spec.scale:
@@ -407,7 +442,8 @@ class _null_ctx:
 
 @functools.partial(jax.jit, static_argnames=("lv", "backend"))
 def _fold_scaled_chunk(chunk: Array, lo: Array, span: Array, key: Array, *,
-                       lv: LevelSpec, backend) -> tuple[Array, Array, Array]:
+                       lv: LevelSpec, backend
+                       ) -> tuple[Array, Array, Array, Array]:
     """jit wrapper over :func:`chunk_fold` that applies the *global* scale
     parameters to one chunk.  Compiled once per (chunk shape, level spec,
     backend) — with fixed-size chunks that is one trace plus at most one
@@ -478,6 +514,8 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
     acc = _PoolAccumulator(spec.levels, key_local, shard=0, backend=be,
                            log=(log if log is not NULL else None))
     n_dropped = jnp.asarray(0, jnp.int32)
+    fold_iters = jnp.asarray(0, jnp.int32)   # true Lloyd-iteration count
+    fold_budget = 0                          # sum of max_iters budgets
     n_points = n_chunks = max_chunk = 0
     fold_rate = log.rate("fold_rate", units="points")
     with log.timer("fold"):
@@ -493,10 +531,12 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
                   else dataclasses.replace(base, n_sub=max(1, m)))
             ck = (key_local if i == 0
                   else jax.random.fold_in(key_local, _CHUNK_KEY_OFFSET + i))
-            c, w, nd = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv,
-                                          backend=be)
+            c, w, nd, ir = _fold_scaled_chunk(chunk, lo, span, ck, lv=lv,
+                                              backend=be)
             acc.add(c, w)
             n_dropped = n_dropped + nd
+            fold_iters = fold_iters + ir
+            fold_budget += lv.effective_stop.max_iters * lv.n_sub
             n_points += m
             n_chunks += 1
             max_chunk = max(max_chunk, m)
@@ -517,6 +557,10 @@ def fit_chunked(source, spec: ClusterSpec, key: Optional[Array] = None, *,
 
     with log.timer("merge", pool=int(pool.shape[0]), k=spec.merge.k):
         merged = merge_pool(pool, pool_w, spec.merge, key_global, backend=be)
+    if log is not NULL:
+        _log_stage_iters(log, "fold", int(fold_iters), fold_budget)
+        _log_stage_iters(log, "merge", int(merged.n_iter),
+                         spec.merge.effective_stop.max_iters)
 
     centers, local_centers = merged.centers, pool
     if spec.scale:
@@ -603,21 +647,22 @@ def standard_kmeans(
 ) -> SampledClusteringResult:
     """The baseline the paper compares against (plain Lloyd on all points),
     wrapped to return the same result type.  With ``spec=`` the merge and
-    execution sections supply (iters, init, restarts, backend, scale) —
+    execution sections supply (stop, init, restarts, backend, scale) —
     the baseline is the merge stage run on the raw points."""
+    stop = None
     if spec is not None:
         if spec.merge.k != k:
             raise ValueError(
                 f"standard_kmeans(k={k}) disagrees with spec.merge.k="
                 f"{spec.merge.k}")
-        iters = spec.merge.iters
+        iters, stop = None, spec.merge.effective_stop
         init, restarts = spec.merge.init, spec.merge.restarts
         backend, scale = spec.execution.backend, spec.scale
     if key is None:
         key = jax.random.PRNGKey(0)
     xs, params = feature_scale(x) if scale else (x, None)
     res = kmeans(xs, k, iters=iters, key=key, init=init, backend=backend,
-                 restarts=restarts)
+                 restarts=restarts, stop=stop)
     centers = unscale(res.centers, params) if scale else res.centers
     return SampledClusteringResult(
         centers, sse_fn(x, centers), centers, res.counts,

@@ -41,6 +41,80 @@ _SSE_POLICIES = ("exact", "pool")
 # field) so serialized specs and their stable_hash stay unchanged.
 CHUNK_FOLD_BUFFER = 8
 
+_STOP_METRICS = ("rel_sse", "center_shift")
+
+
+@dataclasses.dataclass(frozen=True)
+class StopSpec:
+    """Convergence-driven stopping policy for a Lloyd loop.
+
+    Every Lloyd loop in the stack (local stage, reduce levels, merge,
+    stream fold/merge, KV recompression, PQ codebooks, gradient
+    quantization) accepts one of these instead of a bare trip count:
+
+    * ``max_iters`` — hard iteration ceiling (the old ``iters``).
+    * ``tol`` — convergence tolerance.  ``tol=0`` (the default) disables
+      the convergence test entirely and runs the *static* fixed-trip
+      ``fori_loop`` path, bit-for-bit identical to the pre-StopSpec
+      behavior (and vmap/shard_map friendly: no data-dependent trip
+      count, no stragglers).  ``tol>0`` switches the loop to
+      ``lax.while_loop`` with a data-dependent exit.
+    * ``metric`` — what ``tol`` tests: ``"rel_sse"`` stops when the
+      relative SSE improvement ``(prev - sse) / prev`` of one Lloyd step
+      falls to ``tol`` or below; ``"center_shift"`` stops when the
+      largest per-center Euclidean move does.
+    * ``min_iters`` — convergence cannot fire before this many
+      iterations have run (the ceiling still applies).
+    * ``patience`` — the metric must hit the tolerance on this many
+      *consecutive* iterations before the loop exits (guards against a
+      single flat step on plateaued objectives).
+    * ``minibatch`` — ``>0`` switches the loop to mini-batch Lloyd
+      (Sculley-style): each iteration samples this many rows
+      (weight-proportionally) and applies a running cumulative-count
+      learning-rate center update instead of a full pass.  Meant for the
+      big merge stage over huge representative pools.
+
+    Under ``vmap`` (the per-partition local stage) a ``tol>0`` loop is
+    masked per lane by JAX's ``while_loop`` batching rule: converged
+    partitions freeze (their carry is kept by ``select``) and the batched
+    loop exits once every lane is done — static shapes throughout.
+    """
+    max_iters: int = 25
+    tol: float = 0.0
+    metric: str = "rel_sse"
+    min_iters: int = 1
+    patience: int = 1
+    minibatch: int = 0
+
+    def __post_init__(self):
+        if self.max_iters < 0:
+            raise ValueError(
+                f"StopSpec: max_iters must be >= 0, got {self.max_iters}")
+        if self.tol < 0:
+            raise ValueError(f"StopSpec: tol must be >= 0, got {self.tol}")
+        if self.metric not in _STOP_METRICS:
+            raise ValueError(
+                f"unknown stop metric {self.metric!r}; known: "
+                f"{_STOP_METRICS}")
+        if self.min_iters < 0:
+            raise ValueError(
+                f"StopSpec: min_iters must be >= 0, got {self.min_iters}")
+        if self.patience < 1:
+            raise ValueError(
+                f"StopSpec: patience must be >= 1, got {self.patience}")
+        if self.minibatch < 0:
+            raise ValueError(
+                f"StopSpec: minibatch must be >= 0, got {self.minibatch}")
+
+
+def _effective_stop(sub) -> "StopSpec":
+    """The stopping policy of a sub-spec carrying legacy ``iters`` plus an
+    optional ``stop`` override: ``stop`` wins when set, else the static
+    fixed-trip policy ``StopSpec(max_iters=iters)`` (bit-for-bit the
+    pre-StopSpec behavior)."""
+    return sub.stop if sub.stop is not None else StopSpec(
+        max_iters=sub.iters)
+
 
 def _level_out(n: int, lv: "LevelSpec") -> int:
     """Pool rows produced by one reduce level over ``n`` pool rows — the
@@ -71,11 +145,18 @@ class LocalSpec:
 
     ``compression`` is the paper's ``c`` (an N-point partition is summarised
     by N//c local centers); ``init`` resolves against
-    :func:`repro.core.kmeans.get_init`.
+    :func:`repro.core.kmeans.get_init`.  ``iters`` is the legacy fixed trip
+    count — a deprecated alias for ``stop.max_iters``; when ``stop`` is set
+    it is canonical and ``iters`` is ignored.
     """
     compression: int = 5
     iters: int = 10
     init: str = "kmeans++"
+    stop: Optional[StopSpec] = None
+
+    @property
+    def effective_stop(self) -> StopSpec:
+        return _effective_stop(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,6 +178,11 @@ class LevelSpec:
     init: str = "kmeans++"
     scheme: str = "equal"
     capacity_factor: float = 2.0
+    stop: Optional[StopSpec] = None
+
+    @property
+    def effective_stop(self) -> StopSpec:
+        return _effective_stop(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,13 +224,20 @@ class MergeSpec:
 
     ``k`` is the global cluster count; ``weighted=True`` weights each local
     center by its member count (beyond-paper refinement); ``restarts`` is
-    the multi-seed lowest-SSE guard.
+    the multi-seed lowest-SSE guard.  ``iters`` is the legacy fixed trip
+    count — a deprecated alias for ``stop.max_iters``; ``stop`` (including
+    the mini-batch option) is canonical when set.
     """
     k: int
     iters: int = 25
     weighted: bool = False
     restarts: int = 4
     init: str = "kmeans++"
+    stop: Optional[StopSpec] = None
+
+    @property
+    def effective_stop(self) -> StopSpec:
+        return _effective_stop(self)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -227,28 +320,42 @@ class ClusterSpec:
              mode: str = "auto", mesh_axis: str = "data",
              donate: bool = False,
              levels: "int | tuple" = (),
-             chunk_points: Optional[int] = None) -> "ClusterSpec":
+             chunk_points: Optional[int] = None,
+             tol: float = 0.0,
+             minibatch: int = 0) -> "ClusterSpec":
         """Build a spec from the historical flat kwarg vocabulary (what
         ``sampled_kmeans`` took before specs existed).  ``init`` seeds both
         stages unless ``merge_init`` overrides the merge stage.  ``levels``
         takes a tuple of :class:`LevelSpec` or an int total level count
         (``levels=n`` appends ``n - 1`` default reduce levels).
         ``chunk_points`` sizes the out-of-core chunk schedule (other
-        :class:`ChunkSpec` knobs keep their defaults)."""
+        :class:`ChunkSpec` knobs keep their defaults).  ``tol`` > 0 turns
+        on convergence-driven early exit (``StopSpec`` with the stage's
+        iteration budget as ``max_iters``) for the local and merge stages;
+        ``minibatch`` > 0 additionally makes the merge stage mini-batch.
+        The default ``tol=0, minibatch=0`` attaches no StopSpec at all —
+        serialization and ``stable_hash`` are unchanged from before
+        StopSpec existed."""
         if isinstance(levels, int):
             if levels < 1:
                 raise ValueError(f"levels={levels}: the reduce tree has at "
                                  f"least the base local stage (levels >= 1)")
             levels = tuple(LevelSpec() for _ in range(levels - 1))
+        local_stop = (StopSpec(max_iters=local_iters, tol=tol)
+                      if tol > 0 else None)
+        merge_stop = (StopSpec(max_iters=global_iters, tol=tol,
+                               minibatch=minibatch)
+                      if tol > 0 or minibatch > 0 else None)
         return cls(
             chunk=(ChunkSpec(chunk_points=chunk_points)
                    if chunk_points is not None else ChunkSpec()),
             partition=PartitionSpec(scheme=scheme, n_sub=n_sub,
                                     capacity_factor=capacity_factor),
             local=LocalSpec(compression=compression, iters=local_iters,
-                            init=init),
+                            init=init, stop=local_stop),
             merge=MergeSpec(k=k, iters=global_iters, weighted=weighted_merge,
-                            restarts=restarts, init=merge_init or init),
+                            restarts=restarts, init=merge_init or init,
+                            stop=merge_stop),
             execution=ExecutionSpec(backend=backend if backend is not None
                                     else "auto", mode=mode,
                                     mesh_axis=mesh_axis, donate=donate),
@@ -265,6 +372,12 @@ class ClusterSpec:
         if isinstance(be, LloydBackend):
             d["execution"]["backend"] = be.name
         d["levels"] = [dict(lv) for lv in d["levels"]]  # JSON-friendly list
+        # an unset stopping policy is omitted entirely, so specs that never
+        # mention StopSpec serialize (and stable_hash) exactly as before it
+        # existed — committed benchmark baselines keyed by spec_hash survive
+        for sub in [d["local"], d["merge"], *d["levels"]]:
+            if sub.get("stop") is None:
+                sub.pop("stop", None)
         return d
 
     @classmethod
@@ -272,6 +385,22 @@ class ClusterSpec:
         """Inverse of :meth:`to_dict`; unknown keys raise (catch config
         typos instead of silently ignoring them)."""
         d = dict(d)
+
+        def parse_stop(sub: dict, where: str) -> dict:
+            """Inflate a serialized ``stop`` entry back into a StopSpec
+            (``None`` passes through; unknown stop keys raise)."""
+            stop = sub.get("stop")
+            if stop is None or isinstance(stop, StopSpec):
+                return sub
+            stop = dict(stop)
+            known = {f.name for f in dataclasses.fields(StopSpec)}
+            unknown = set(stop) - known
+            if unknown:
+                raise ValueError(
+                    f"ClusterSpec.from_dict: unknown {where}.stop keys "
+                    f"{sorted(unknown)}; known: {sorted(known)}")
+            return dict(sub, stop=StopSpec(**stop))
+
         parts = {
             "merge": (MergeSpec, d.pop("merge")),
             "partition": (PartitionSpec, d.pop("partition", {})),
@@ -288,6 +417,8 @@ class ClusterSpec:
                 raise ValueError(
                     f"ClusterSpec.from_dict: unknown {field} keys "
                     f"{sorted(unknown)}; known: {sorted(known)}")
+            if field in ("merge", "local"):
+                sub = parse_stop(sub, field)
             kwargs[field] = klass(**sub)
         known_lv = {f.name for f in dataclasses.fields(LevelSpec)}
         levels = []
@@ -298,7 +429,7 @@ class ClusterSpec:
                 raise ValueError(
                     f"ClusterSpec.from_dict: unknown levels[{i}] keys "
                     f"{sorted(unknown)}; known: {sorted(known_lv)}")
-            levels.append(LevelSpec(**lv))
+            levels.append(LevelSpec(**parse_stop(lv, f"levels[{i}]")))
         scale = d.pop("scale", True)
         if d:
             raise ValueError(
@@ -339,7 +470,8 @@ class ClusterSpec:
                          compression=self.local.compression,
                          iters=self.local.iters, init=self.local.init,
                          scheme=self.partition.scheme,
-                         capacity_factor=self.partition.capacity_factor)
+                         capacity_factor=self.partition.capacity_factor,
+                         stop=self.local.stop)
         return (base,) + self.levels
 
     def pool_schedule(self, n_points: int) -> tuple:
@@ -421,7 +553,8 @@ class ClusterSpec:
         """``dataclasses.replace`` that also reaches one level down:
         ``spec.replace(mode="stream", n_sub=16)`` touches the right
         sub-spec by field name.  Names that exist in more than one
-        sub-spec (``iters``, ``init``) are ambiguous and raise — pass the
+        sub-spec (``iters``, ``init``, ``stop``) are ambiguous and raise
+        — pass the
         sub-spec explicitly (``spec.replace(merge=...)``)."""
         top = {f.name for f in dataclasses.fields(ClusterSpec)}
         updates: dict[str, Any] = {}

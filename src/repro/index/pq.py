@@ -53,8 +53,8 @@ def train_codebooks(residuals: Array, pq: PQSpec, key: Array, *,
     sub = split_subspaces(residuals.astype(jnp.float32), pq.n_subspaces)
     keys = jax.random.split(key, pq.n_subspaces)
     fit = jax.vmap(
-        lambda xs, kk: kmeans(xs, pq.n_codes, iters=pq.iters, key=kk,
-                              init="kmeans++", backend=backend,
+        lambda xs, kk: kmeans(xs, pq.n_codes, stop=pq.effective_stop,
+                              key=kk, init="kmeans++", backend=backend,
                               restarts=1).centers)
     return fit(sub, keys)
 

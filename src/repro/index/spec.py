@@ -22,7 +22,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Mapping, Optional
 
-from repro.core.spec import ClusterSpec
+from repro.core.spec import ClusterSpec, StopSpec
 
 _PQ_BITS = (4, 8)
 
@@ -34,13 +34,17 @@ class PQSpec:
     ``2**bits``-entry codebook (trained on coarse *residuals* — the PQ
     standard that keeps quantization error far below neighbor gaps).
 
-    ``iters`` is the Lloyd budget of each per-subspace codebook fit;
-    ``bits`` must be 4 or 8 (codes are stored as uint8 either way — 4-bit
-    codebooks trade recall for a 16-entry LUT that stays in registers).
+    ``iters`` is the Lloyd budget of each per-subspace codebook fit (a
+    deprecated alias for ``stop``: when ``stop`` is set it takes precedence
+    and carries the full stopping policy — see
+    :class:`~repro.core.spec.StopSpec`); ``bits`` must be 4 or 8 (codes are
+    stored as uint8 either way — 4-bit codebooks trade recall for a
+    16-entry LUT that stays in registers).
     """
     n_subspaces: int = 16
     bits: int = 8
     iters: int = 10
+    stop: Optional[StopSpec] = None
 
     def __post_init__(self):
         if self.n_subspaces < 1:
@@ -51,6 +55,13 @@ class PQSpec:
                 f"PQSpec: bits must be one of {_PQ_BITS}, got {self.bits}")
         if self.iters < 1:
             raise ValueError(f"PQSpec: iters must be >= 1, got {self.iters}")
+
+    @property
+    def effective_stop(self) -> StopSpec:
+        """The codebook-fit stopping policy: ``stop`` when set, else the
+        legacy fixed budget ``StopSpec(max_iters=iters)``."""
+        return (self.stop if self.stop is not None
+                else StopSpec(max_iters=self.iters))
 
     @property
     def n_codes(self) -> int:
@@ -117,9 +128,14 @@ class IndexSpec:
 
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> dict:
+        pq = dataclasses.asdict(self.pq)
+        if pq.get("stop") is None:
+            # omit-when-None keeps legacy specs byte-identical (stable_hash
+            # compatibility for committed baselines)
+            pq.pop("stop", None)
         return {
             "coarse": self.coarse.to_dict(),
-            "pq": dataclasses.asdict(self.pq),
+            "pq": pq,
             "nprobe": self.nprobe,
             "train_points": self.train_points,
         }
@@ -135,6 +151,15 @@ class IndexSpec:
             raise ValueError(
                 f"IndexSpec.from_dict: unknown pq keys {sorted(unknown)}; "
                 f"known: {sorted(known)}")
+        if pq.get("stop") is not None and not isinstance(pq["stop"], StopSpec):
+            stop = dict(pq["stop"])
+            stop_known = {f.name for f in dataclasses.fields(StopSpec)}
+            stop_unknown = set(stop) - stop_known
+            if stop_unknown:
+                raise ValueError(
+                    f"IndexSpec.from_dict: unknown pq.stop keys "
+                    f"{sorted(stop_unknown)}; known: {sorted(stop_known)}")
+            pq["stop"] = StopSpec(**stop)
         kwargs = {}
         for name in ("nprobe", "train_points"):
             if name in d:

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Optional
 
 import jax
@@ -21,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ArchConfig, ShapeConfig
-from repro.core.spec import ClusterSpec
+from repro.core.spec import ClusterSpec, StopSpec
 from repro.models.attention import compress_kv_cache
 from repro.models.registry import build_model, cache_kind
 from repro.stream.kv import refresh_layer_cache
@@ -31,18 +32,62 @@ from repro.stream.kv import refresh_layer_cache
 class ServeConfig:
     max_tokens: int = 32
     recompress_every: int = 0       # 0 = never (window ring handles recency)
-    recompress_iters: int = 4       # Lloyd iters per incremental refresh
+    recompress_iters: Optional[int] = None
+                                    # DEPRECATED alias: fixed Lloyd budget per
+                                    # incremental refresh.  Use
+                                    # recompress_stop (or recompress_spec,
+                                    # which is canonical) instead; when unset
+                                    # the refresh runs StopSpec(max_iters=4).
+    recompress_stop: Optional[StopSpec] = None
+                                    # stopping policy per incremental refresh
     temperature: float = 0.0        # 0 = greedy
     kmeans_backend: str = "auto"    # LloydBackend for the recompression
                                     # k-means (repro.core.backend)
     recompress_spec: "ClusterSpec | None" = None
                                     # declarative alternative: a ClusterSpec
                                     # whose merge/execution sections supply
-                                    # the refresh iters + backend (overrides
-                                    # recompress_iters / kmeans_backend)
+                                    # the refresh stopping policy + backend.
+                                    # Canonical when set — overrides
+                                    # recompress_iters / recompress_stop /
+                                    # kmeans_backend.
     telemetry: str = "off"          # RunLogger name (repro.telemetry):
                                     # tokens/sec per generate + recompress
                                     # timers
+
+
+def resolve_recompress(scfg: ServeConfig) -> tuple[StopSpec, str]:
+    """Resolve the refresh stopping policy and backend name from a
+    :class:`ServeConfig`.
+
+    Precedence: ``recompress_spec`` (canonical — its merge section *is* the
+    refresh) > ``recompress_stop`` > the deprecated ``recompress_iters``
+    alias > ``StopSpec(max_iters=4)``.  Setting the legacy ``recompress_iters``
+    alongside a spec used to silently duplicate the knob; now the spec wins
+    and a :class:`DeprecationWarning` flags the ignored field.
+    """
+    rspec = scfg.recompress_spec
+    if rspec is not None:
+        if scfg.recompress_iters is not None:
+            warnings.warn(
+                "ServeConfig.recompress_iters is ignored when "
+                "recompress_spec is set — the spec's merge section is the "
+                "canonical refresh policy (recompress_iters is a deprecated "
+                "alias; drop it or encode it as recompress_spec.merge.stop)",
+                DeprecationWarning, stacklevel=2)
+        return rspec.merge.effective_stop, rspec.execution.backend
+    if scfg.recompress_stop is not None:
+        if scfg.recompress_iters is not None:
+            raise ValueError(
+                "ServeConfig: pass either recompress_stop or the deprecated "
+                "recompress_iters alias, not both")
+        return scfg.recompress_stop, scfg.kmeans_backend
+    if scfg.recompress_iters is not None:
+        warnings.warn(
+            "ServeConfig.recompress_iters is deprecated: use "
+            "recompress_stop=StopSpec(max_iters=...) (or a recompress_spec)",
+            DeprecationWarning, stacklevel=2)
+        return StopSpec(max_iters=scfg.recompress_iters), scfg.kmeans_backend
+    return StopSpec(max_iters=4), scfg.kmeans_backend
 
 
 class ServeEngine:
@@ -67,14 +112,10 @@ class ServeEngine:
                 f"recompress_every={every} exceeds cluster_window="
                 f"{shape.cluster_window}: tokens would be evicted unfolded")
         from repro.core.backend import get_backend
-        rspec = self.scfg.recompress_spec
-        refresh_iters = (rspec.merge.iters if rspec is not None
-                         else self.scfg.recompress_iters)
-        refresh_backend = get_backend(rspec.execution.backend
-                                      if rspec is not None
-                                      else self.scfg.kmeans_backend)
+        refresh_stop, backend_name = resolve_recompress(self.scfg)
+        refresh_backend = get_backend(backend_name)
         self._refresh = jax.jit(functools.partial(
-            refresh_layer_cache, iters=refresh_iters,
+            refresh_layer_cache, stop=refresh_stop,
             backend=refresh_backend))
         self._n_generate_calls = 0
         self.logger = get_run_logger(

@@ -41,7 +41,7 @@ from repro.core.backend import BackendSpec, LloydBackend, get_backend
 from repro.core.kmeans import kmeans, pairwise_sqdist
 from repro.core.metrics import sse as sse_fn
 from repro.core.pipeline import chunk_fold, reduce_pool
-from repro.core.spec import ClusterSpec, LevelSpec
+from repro.core.spec import ClusterSpec, LevelSpec, StopSpec
 from repro.core.subcluster import feature_scale, unscale
 
 Array = jax.Array
@@ -77,6 +77,8 @@ class StreamConfig:
     levels: tuple = ()             # tuple[LevelSpec, ...]: extra reduce
     #                                levels compressing the coreset pool
     #                                before each warm-started merge
+    local_stop: Optional[StopSpec] = None   # overrides local_iters when set
+    merge_stop: Optional[StopSpec] = None   # overrides merge_iters when set
 
     @classmethod
     def from_spec(cls, spec: ClusterSpec, **overrides) -> "StreamConfig":
@@ -97,6 +99,8 @@ class StreamConfig:
             backend=spec.execution.backend,
             telemetry=spec.execution.telemetry,
             levels=spec.levels,
+            local_stop=spec.local.stop,
+            merge_stop=spec.merge.stop,
         )
         base.update(overrides)
         return cls(**base)
@@ -115,8 +119,9 @@ def summarize_chunk(chunk: Array, cfg: StreamConfig, key: Array,
     xs, params = feature_scale(chunk)
     lv = LevelSpec(n_sub=cfg.n_sub, compression=cfg.compression,
                    iters=cfg.local_iters, init=cfg.init_mode,
-                   scheme=cfg.scheme, capacity_factor=cfg.capacity_factor)
-    centers, weights, _ = chunk_fold(
+                   scheme=cfg.scheme, capacity_factor=cfg.capacity_factor,
+                   stop=cfg.local_stop)
+    centers, weights, _, _ = chunk_fold(
         xs, lv, key,
         backend=backend if backend is not None else cfg.backend)
     return unscale(centers, params), weights
@@ -185,8 +190,10 @@ def fold_and_merge(state: StreamState, new_pts: Array, new_w: Array,
                                       jax.random.fold_in(key, 1 + i),
                                       backend=backend if backend is not None
                                       else cfg.backend)
+    merge_stop = (cfg.merge_stop if cfg.merge_stop is not None
+                  else StopSpec(max_iters=cfg.merge_iters))
     merged = kmeans(pool, cfg.k, weights=pool_w,
-                    iters=cfg.merge_iters, key=key, init=warm,
+                    stop=merge_stop, key=key, init=warm,
                     backend=backend if backend is not None else cfg.backend)
     return StreamState(
         centers=merged.centers,

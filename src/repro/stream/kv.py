@@ -26,14 +26,16 @@ import jax.numpy as jnp
 from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans, update_centers
 from repro.core.pipeline import reduce_pool
-from repro.core.spec import ClusterSpec
+from repro.core.spec import ClusterSpec, StopSpec
 
 Array = jax.Array
 
 
 def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
                             wk: Array, wv: Array, w_valid: Array,
-                            *, iters: int = 4, key: Array | None = None,
+                            *, iters: int | None = None,
+                            stop: StopSpec | None = None,
+                            key: Array | None = None,
                             backend: BackendSpec = None,
                             spec: ClusterSpec | None = None,
                             ) -> tuple[Array, Array, Array]:
@@ -49,14 +51,23 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
     zero weight, so they act as free capacity: the warm-started Lloyd can
     only move them onto window keys (a zero-weight point at its old
     position attracts nothing it keeps).
+
+    The Lloyd budget comes from ``stop`` (a :class:`StopSpec`), or the
+    deprecated ``iters=`` alias, or ``spec.merge.effective_stop`` when a
+    spec is given; unspecified, it defaults to ``StopSpec(max_iters=4)``.
     """
+    if iters is not None and stop is not None:
+        raise TypeError("refresh_clustered_cache: pass either stop= or the "
+                        "deprecated iters= alias, not both")
     levels = ()
     if spec is not None:
         # the refresh IS the spec's merge stage (warm-started, centroids as
-        # the coreset) — iters/backend come from the merge/execution
-        # sections, and spec.levels pre-compresses the [centroids ‖ window]
-        # pool through the hierarchical reduce tree before the merge
-        iters = spec.merge.iters
+        # the coreset) — the stopping policy/backend come from the
+        # merge/execution sections, and spec.levels pre-compresses the
+        # [centroids ‖ window] pool through the hierarchical reduce tree
+        # before the merge
+        stop = spec.merge.effective_stop
+        iters = None
         backend = backend if backend is not None else spec.execution.backend
         levels = spec.levels
         if any(lvl.scheme == "unequal" for lvl in levels):
@@ -68,6 +79,8 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
                 "clamp overflow pool entries out of the merge input — "
                 "prefer equal-scheme levels (or raise capacity_factor)",
                 stacklevel=2)
+    if stop is None:
+        stop = StopSpec(max_iters=4 if iters is None else iters)
     if key is None:
         key = jax.random.PRNGKey(0)
     be = get_backend(backend)
@@ -92,7 +105,7 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
         for i, lvl in enumerate(levels):
             pool, pool_w, _ = reduce_pool(pool, pool_w, lvl,
                                           jax.random.fold_in(kk, 1 + i), be)
-        res = kmeans(pool, n, weights=pool_w, iters=iters, key=kk, init=kc1,
+        res = kmeans(pool, n, weights=pool_w, stop=stop, key=kk, init=kc1,
                      backend=be)
         if levels:
             # the merge ran on the reduced pool; re-assign the ORIGINAL
@@ -109,7 +122,8 @@ def refresh_clustered_cache(kc: Array, vc: Array, counts: Array,
             ncnt.reshape(counts.shape).astype(counts.dtype))
 
 
-def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
+def refresh_layer_cache(cache: dict, pos: Array, *, iters: int | None = None,
+                        stop: StopSpec | None = None,
                         key: Array | None = None,
                         backend: BackendSpec = None,
                         spec: ClusterSpec | None = None) -> dict:
@@ -128,7 +142,7 @@ def refresh_layer_cache(cache: dict, pos: Array, *, iters: int = 4,
     v4 = jnp.broadcast_to(v4, cache["counts"].shape[:3] + (window,))
     kc, vc, counts = refresh_clustered_cache(
         cache["kc"], cache["vc"], cache["counts"],
-        cache["wk"], cache["wv"], v4, iters=iters, key=key, backend=backend,
-        spec=spec)
+        cache["wk"], cache["wv"], v4, iters=iters, stop=stop, key=key,
+        backend=backend, spec=spec)
     return dict(cache, kc=kc, vc=vc, counts=counts,
                 slot_pos=jnp.full_like(cache["slot_pos"], -1))

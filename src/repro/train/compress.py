@@ -21,19 +21,26 @@ import jax.numpy as jnp
 
 from repro.core.backend import BackendSpec, get_backend
 from repro.core.kmeans import kmeans
-from repro.core.spec import ClusterSpec
+from repro.core.spec import ClusterSpec, StopSpec
 
 
 def quantize_leaf(g: jax.Array, levels: int, key,
-                  backend: BackendSpec = None, *, iters: int = 8,
+                  backend: BackendSpec = None, *, iters: int | None = None,
+                  stop: StopSpec | None = None,
                   init: str = "landmark") -> tuple[jax.Array, dict]:
     """-> (dequantized g, {codebook, indices-free stats}).  1-D k-means on a
     value sample (equal-sized subclustering over the sorted sample = the
-    paper's Algorithm 1 in one dimension)."""
+    paper's Algorithm 1 in one dimension).  ``stop`` carries the stopping
+    policy (``iters`` is the deprecated fixed-budget alias; default 8)."""
+    if stop is None:
+        stop = StopSpec(max_iters=8 if iters is None else iters)
+    elif iters is not None:
+        raise TypeError("quantize_leaf: pass either stop= or the deprecated "
+                        "iters= alias, not both")
     flat = g.reshape(-1, 1).astype(jnp.float32)
     n = flat.shape[0]
     samp = flat[:: max(1, n // 4096)][:4096]
-    res = kmeans(samp, levels, iters=iters, key=key, init=init,
+    res = kmeans(samp, levels, stop=stop, key=key, init=init,
                  backend=backend)
     code = res.centers[:, 0]                       # (levels,)
     idx = jnp.argmin(jnp.abs(flat - code[None, :]), axis=-1)
@@ -47,15 +54,15 @@ def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
     """Returns (compress_fn(grads, residual) -> (grads', residual'), init_residual).
 
     With ``spec=`` the codebook fit is declared as a ClusterSpec: ``merge.k``
-    is the level count, ``merge.iters``/``merge.init`` configure the 1-D
-    k-means, ``execution.backend`` the Lloyd machinery.
+    is the level count, ``merge.effective_stop``/``merge.init`` configure the
+    1-D k-means, ``execution.backend`` the Lloyd machinery.
     """
     if spec is not None:
         levels = spec.merge.k
-        iters, init = spec.merge.iters, spec.merge.init
+        stop, init = spec.merge.effective_stop, spec.merge.init
         backend = backend if backend is not None else spec.execution.backend
     else:
-        iters, init = 8, "landmark"
+        stop, init = StopSpec(max_iters=8), "landmark"
     be = get_backend(backend)
 
     def compress(grads, residual=None):
@@ -67,7 +74,7 @@ def make_grad_compressor(levels: int = 16, error_feedback: bool = True,
             gc = g + r if error_feedback else g
             key = jax.random.fold_in(jax.random.PRNGKey(seed), i)
             deq, _ = quantize_leaf(gc, levels, key, backend=be,
-                                   iters=iters, init=init)
+                                   stop=stop, init=init)
             out.append(deq)
             new_res.append((gc - deq) if error_feedback else r)
         return (jax.tree.unflatten(treedef, out),

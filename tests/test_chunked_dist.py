@@ -252,9 +252,9 @@ def test_distributed_merge_agreement():
     np.testing.assert_array_equal(np.asarray(ref.local_centers),
                                   np.asarray(res.local_centers))
     _, key_global = jax.random.split(key)
-    expect = merge_pool_distributed([np.asarray(ref.local_centers)],
-                                    [np.asarray(ref.local_weights)],
-                                    spec, _mesh1(), key_global)
+    expect, _ = merge_pool_distributed([np.asarray(ref.local_centers)],
+                                       [np.asarray(ref.local_weights)],
+                                       spec, _mesh1(), key_global)
     np.testing.assert_array_equal(np.asarray(expect), np.asarray(res.centers))
 
 
@@ -269,12 +269,12 @@ def test_distributed_merge_pads_ragged_pools():
     pool = rng.normal(size=(12, 3)).astype(np.float32)   # 12 < 2k = 16
     w = rng.uniform(1.0, 5.0, 12).astype(np.float32)
     key = jax.random.PRNGKey(1)
-    base = merge_pool_distributed([pool], [w], spec, _mesh1(), key)
+    base, _ = merge_pool_distributed([pool], [w], spec, _mesh1(), key)
     padded_pool = np.concatenate(
         [pool, np.zeros((4, 3), np.float32)], axis=0)    # 16 <= 2k
     padded_w = np.concatenate([w, np.zeros((4,), np.float32)], axis=0)
-    padded = merge_pool_distributed([padded_pool], [padded_w], spec,
-                                    _mesh1(), key)
+    padded, _ = merge_pool_distributed([padded_pool], [padded_w], spec,
+                                       _mesh1(), key)
     np.testing.assert_array_equal(np.asarray(base), np.asarray(padded))
 
 

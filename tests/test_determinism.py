@@ -64,3 +64,111 @@ def test_single_chunk_chunked_matches_in_core(n, k, n_sub, seed):
     np.testing.assert_array_equal(np.asarray(ref.centers),
                                   np.asarray(res.centers))
     assert float(ref.sse) == float(res.sse)
+
+
+def _with_tol0_stops(spec):
+    """The explicit ``StopSpec(tol=0)`` spelling of a fixed-budget spec —
+    must trace to the SAME static Lloyd loop (the bit-for-bit escape
+    hatch)."""
+    import dataclasses
+    from repro.core.spec import StopSpec
+    return spec.replace(
+        local=dataclasses.replace(
+            spec.local, stop=StopSpec(max_iters=spec.local.iters, tol=0.0)),
+        merge=dataclasses.replace(
+            spec.merge, stop=StopSpec(max_iters=spec.merge.iters, tol=0.0)),
+    )
+
+
+@settings(max_examples=4, deadline=None)
+@given(n=st.sampled_from([300, 600]),
+       k=st.integers(2, 5),
+       n_sub=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2 ** 16))
+def test_tol0_stop_spelling_bit_identical(n, k, n_sub, seed):
+    """``StopSpec(tol=0)`` is a spelling, not a behavior change: in-core and
+    single-chunk out-of-core fits agree bit-for-bit with the legacy
+    ``iters=`` spelling."""
+    spec = ClusterSpec.make(k, n_sub=n_sub, compression=3)
+    sspec = _with_tol0_stops(spec)
+    x, key = _workload(n, k, 2, seed)
+    ref = fit_from_spec(x, spec, key)
+    res = fit_from_spec(x, sspec, key)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(res.centers))
+    assert float(ref.sse) == float(res.sse)
+    cref, _ = fit_chunked(x, spec.replace(
+        execution=ExecutionSpec(mode="chunked"),
+        chunk=ChunkSpec(chunk_points=n)), key)
+    cres, _ = fit_chunked(x, sspec.replace(
+        execution=ExecutionSpec(mode="chunked"),
+        chunk=ChunkSpec(chunk_points=n)), key)
+    np.testing.assert_array_equal(np.asarray(cref.centers),
+                                  np.asarray(cres.centers))
+
+
+def test_tol0_stop_spelling_chunked_dist_and_stream():
+    """Same pin for the sharded out-of-core executor (1-device mesh) and
+    the streaming engine (explicit tol=0 stops vs legacy iters config)."""
+    from repro import compat
+    from repro.core import fit_chunked_dist
+    from repro.core.spec import StopSpec
+    from repro.stream.engine import StreamConfig, StreamingClusterer
+
+    spec = ClusterSpec.make(4, n_sub=4, compression=3,
+                            chunk_points=300, mode="chunked_dist")
+    sspec = _with_tol0_stops(spec)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(900, 3)).astype(np.float32)
+    mesh = compat.make_mesh((1,), ("data",))
+    key = jax.random.PRNGKey(0)
+    ref, _ = fit_chunked_dist(x, spec, mesh, key)
+    res, _ = fit_chunked_dist(x, sspec, mesh, key)
+    np.testing.assert_array_equal(np.asarray(ref.centers),
+                                  np.asarray(res.centers))
+    assert float(ref.sse) == float(res.sse)
+
+    base_cfg = StreamConfig(k=4, n_sub=4, buffer_size=128,
+                            local_iters=6, merge_iters=6)
+    stop_cfg = StreamConfig(k=4, n_sub=4, buffer_size=128,
+                            local_iters=6, merge_iters=6,
+                            local_stop=StopSpec(max_iters=6, tol=0.0),
+                            merge_stop=StopSpec(max_iters=6, tol=0.0))
+    chunks = [rng.normal(size=(256, 3)).astype(np.float32) for _ in range(3)]
+    states = []
+    for cfg in (base_cfg, stop_cfg):
+        sc = StreamingClusterer(cfg)
+        st_ = sc.init(dim=3)
+        for c in chunks:
+            st_ = sc.update(st_, c)
+        states.append(st_)
+    np.testing.assert_array_equal(np.asarray(states[0].centers),
+                                  np.asarray(states[1].centers))
+    np.testing.assert_array_equal(np.asarray(states[0].coreset_w),
+                                  np.asarray(states[1].coreset_w))
+
+
+def test_tol0_stop_spelling_shard_map():
+    """Same pin for the shard_map wrapper (1-device mesh, both merge
+    paths): explicit tol=0 stops vs the legacy iters spelling."""
+    import dataclasses
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
+    from repro.core import make_distributed_sampled_kmeans
+
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(600, 3)).astype(np.float32)
+    mesh = compat.make_mesh((1,), ("data",))
+    xd = jax.device_put(jnp.asarray(x), NamedSharding(mesh, P("data")))
+    key = jax.random.PRNGKey(0)
+    for merge_path in ("replicated", "distributed"):
+        spec = ClusterSpec.make(4, n_sub=4, compression=3)
+        spec = spec.replace(execution=dataclasses.replace(
+            spec.execution, merge_path=merge_path))
+        sspec = _with_tol0_stops(spec)
+        ref = make_distributed_sampled_kmeans(mesh, spec=spec)(xd, key)
+        res = make_distributed_sampled_kmeans(mesh, spec=sspec)(xd, key)
+        np.testing.assert_array_equal(np.asarray(ref.centers),
+                                      np.asarray(res.centers))
+        assert float(ref.sse) == float(res.sse), merge_path

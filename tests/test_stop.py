@@ -1,0 +1,328 @@
+"""The convergence-driven iteration contract (``StopSpec``).
+
+Covers: validation, the tol=0 bit-for-bit pin against the legacy ``iters=``
+spelling, the ``n_iter`` true-count regression, min_iters/patience
+semantics, both metrics, the mini-batch merge, masked early exit under
+``vmap`` (per-lane counts match solo runs), serialization/hash stability
+(legacy specs must keep their ``stable_hash`` so committed benchmark
+baselines stay keyed), the serve-config legacy-field resolution
+(``recompress_iters`` warn-and-map), and the ``stage_iters`` telemetry.
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import StopSpec, kmeans
+from repro.core.spec import ClusterSpec
+from repro.telemetry import RecordingLogger
+
+
+def _blobs(n=400, k=4, dim=3, seed=0):
+    from repro.data.synthetic import blobs
+    pts, _, _ = blobs(n, n_clusters=k, dim=dim, seed=seed)
+    return jnp.asarray(pts)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kwargs", [
+    dict(max_iters=-1),
+    dict(tol=-1e-3),
+    dict(metric="objective"),
+    dict(min_iters=-1),
+    dict(patience=0),
+    dict(minibatch=-1),
+])
+def test_stopspec_rejects_bad_fields(kwargs):
+    with pytest.raises(ValueError):
+        StopSpec(**kwargs)
+
+
+def test_kmeans_rejects_both_spellings():
+    x = _blobs()
+    with pytest.raises(TypeError):
+        kmeans(x, 4, iters=5, stop=StopSpec(max_iters=5))
+
+
+# ---------------------------------------------------------------------------
+# tol=0: bit-for-bit the legacy fixed-budget path
+# ---------------------------------------------------------------------------
+
+def test_tol0_bitwise_matches_iters_alias():
+    x = _blobs()
+    key = jax.random.PRNGKey(3)
+    a = kmeans(x, 4, iters=7, key=key)
+    b = kmeans(x, 4, stop=StopSpec(max_iters=7), key=key)
+    np.testing.assert_array_equal(np.asarray(a.centers), np.asarray(b.centers))
+    np.testing.assert_array_equal(np.asarray(a.assignment),
+                                  np.asarray(b.assignment))
+    assert float(a.sse) == float(b.sse)
+    assert int(a.n_iter) == int(b.n_iter) == 7
+
+
+# ---------------------------------------------------------------------------
+# n_iter is the true trip count (regression: it used to echo the budget)
+# ---------------------------------------------------------------------------
+
+def test_n_iter_reports_actual_count_under_tol():
+    x = _blobs(n=600, k=3)
+    key = jax.random.PRNGKey(0)
+    res = kmeans(x, 3, stop=StopSpec(max_iters=50, tol=1e-4), key=key)
+    n = int(res.n_iter)
+    assert 1 <= n < 50
+    # the converged answer matches running the full fixed budget: Lloyd is
+    # monotone, so once the objective is flat extra iterations are no-ops
+    ref = kmeans(x, 3, iters=50, key=key)
+    assert float(res.sse) <= float(ref.sse) * (1 + 1e-4)
+
+
+def test_n_iter_static_path_echoes_budget():
+    x = _blobs()
+    res = kmeans(x, 4, iters=6, key=jax.random.PRNGKey(1))
+    assert int(res.n_iter) == 6
+
+
+# ---------------------------------------------------------------------------
+# min_iters / patience
+# ---------------------------------------------------------------------------
+
+def test_patience_delays_exit():
+    # huge tol: every iteration after the first "hits" (iteration 0 cannot —
+    # prev_sse is +inf), so patience=p exits after exactly p+1 iterations
+    x = _blobs()
+    key = jax.random.PRNGKey(2)
+    for p in (1, 3):
+        res = kmeans(x, 4, stop=StopSpec(max_iters=30, tol=1.0, patience=p),
+                     key=key)
+        assert int(res.n_iter) == p + 1, p
+
+
+def test_min_iters_floors_exit():
+    x = _blobs()
+    res = kmeans(x, 4, stop=StopSpec(max_iters=30, tol=1.0, min_iters=5),
+                 key=jax.random.PRNGKey(2))
+    assert int(res.n_iter) == 5
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_center_shift_metric_converges():
+    x = _blobs(n=600, k=3)
+    res = kmeans(x, 3, stop=StopSpec(max_iters=50, tol=1e-4,
+                                     metric="center_shift"),
+                 key=jax.random.PRNGKey(0))
+    assert int(res.n_iter) < 50
+    ref = kmeans(x, 3, iters=50, key=jax.random.PRNGKey(0))
+    assert float(res.sse) <= float(ref.sse) * 1.01
+
+
+# ---------------------------------------------------------------------------
+# mini-batch merge
+# ---------------------------------------------------------------------------
+
+def test_minibatch_runs_and_is_deterministic():
+    x = _blobs(n=800, k=4)
+    key = jax.random.PRNGKey(5)
+    stop = StopSpec(max_iters=12, minibatch=128)
+    a = kmeans(x, 4, stop=stop, key=key)
+    b = kmeans(x, 4, stop=stop, key=key)
+    np.testing.assert_array_equal(np.asarray(a.centers), np.asarray(b.centers))
+    assert np.isfinite(float(a.sse))
+    assert a.centers.shape == (4, 3)
+    # quality sanity: within a generous factor of the full-batch fit
+    full = kmeans(x, 4, iters=12, key=key)
+    assert float(a.sse) <= float(full.sse) * 2.0
+
+
+def test_minibatch_with_tol_stops_early():
+    x = _blobs(n=800, k=3)
+    res = kmeans(x, 3, stop=StopSpec(max_iters=100, minibatch=256, tol=1e-3,
+                                     patience=3),
+                 key=jax.random.PRNGKey(6))
+    assert int(res.n_iter) < 100
+
+
+# ---------------------------------------------------------------------------
+# masked early exit under vmap: per-lane counts match solo runs
+# ---------------------------------------------------------------------------
+
+def test_vmap_lanes_match_solo_runs():
+    stop = StopSpec(max_iters=40, tol=1e-4)
+    xs = jnp.stack([_blobs(n=300, k=3, seed=s) for s in range(3)])
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    batched = jax.vmap(lambda x, k: kmeans(x, 3, stop=stop, key=k))(xs, keys)
+    for lane in range(3):
+        solo = kmeans(xs[lane], 3, stop=stop, key=keys[lane])
+        assert int(batched.n_iter[lane]) == int(solo.n_iter), lane
+        np.testing.assert_array_equal(np.asarray(batched.centers[lane]),
+                                      np.asarray(solo.centers))
+
+
+# ---------------------------------------------------------------------------
+# serialization + hash stability
+# ---------------------------------------------------------------------------
+
+def test_legacy_spec_dict_and_hash_unchanged():
+    spec = ClusterSpec.make(8, n_sub=8, compression=5)
+    d = spec.to_dict()
+    for sub in [d["local"], d["merge"], *d["levels"]]:
+        assert "stop" not in sub
+    assert ClusterSpec.from_dict(d) == spec
+
+
+def test_stop_spec_round_trips():
+    spec = ClusterSpec.make(8, n_sub=8, compression=5, tol=1e-3, minibatch=64)
+    d = spec.to_dict()
+    assert d["merge"]["stop"]["minibatch"] == 64
+    back = ClusterSpec.from_dict(d)
+    assert back == spec
+    assert back.merge.effective_stop == spec.merge.effective_stop
+    assert back.stable_hash() == spec.stable_hash()
+    assert back.stable_hash() != ClusterSpec.make(
+        8, n_sub=8, compression=5).stable_hash()
+
+
+def test_effective_stop_falls_back_to_iters():
+    spec = ClusterSpec.make(8, local_iters=6, global_iters=11)
+    assert spec.local.effective_stop == StopSpec(max_iters=6)
+    assert spec.merge.effective_stop == StopSpec(max_iters=11)
+
+
+def test_index_pqspec_stop_round_trips():
+    from repro.index.spec import IndexSpec
+    ix = IndexSpec.make(16, n_sub=4)
+    d = ix.to_dict()
+    assert "stop" not in d["pq"]
+    assert IndexSpec.from_dict(d) == ix
+    ix2 = ix.replace(stop=StopSpec(max_iters=10, tol=1e-3))
+    assert ix2.pq.effective_stop.tol == 1e-3
+    assert IndexSpec.from_dict(ix2.to_dict()) == ix2
+    assert ix2.stable_hash() != ix.stable_hash()
+
+
+# ---------------------------------------------------------------------------
+# serve config: recompress_iters is a deprecated alias, the spec is canonical
+# ---------------------------------------------------------------------------
+
+def test_serve_resolver_default_and_stop():
+    from repro.serve.engine import ServeConfig, resolve_recompress
+    stop, backend = resolve_recompress(ServeConfig())
+    assert stop == StopSpec(max_iters=4) and backend == "auto"
+    stop, _ = resolve_recompress(
+        ServeConfig(recompress_stop=StopSpec(max_iters=9, tol=1e-3)))
+    assert stop.max_iters == 9 and stop.tol == 1e-3
+
+
+def test_serve_legacy_iters_warns_and_maps():
+    from repro.serve.engine import ServeConfig, resolve_recompress
+    with pytest.warns(DeprecationWarning):
+        stop, _ = resolve_recompress(ServeConfig(recompress_iters=7))
+    assert stop == StopSpec(max_iters=7)
+
+
+def test_serve_spec_wins_over_legacy_iters():
+    from repro.serve.engine import ServeConfig, resolve_recompress
+    spec = ClusterSpec.make(8, tol=1e-3)
+    with pytest.warns(DeprecationWarning):
+        stop, backend = resolve_recompress(
+            ServeConfig(recompress_iters=7, recompress_spec=spec))
+    assert stop == spec.merge.effective_stop
+    assert backend == spec.execution.backend
+
+
+def test_serve_stop_and_iters_conflict():
+    from repro.serve.engine import ServeConfig, resolve_recompress
+    with pytest.raises(ValueError):
+        resolve_recompress(ServeConfig(recompress_iters=7,
+                                       recompress_stop=StopSpec()))
+
+
+def test_kv_refresh_stop_equals_iters_alias():
+    from repro.stream.kv import refresh_clustered_cache
+    rng = np.random.default_rng(0)
+    kc = jnp.asarray(rng.normal(size=(2, 6, 4)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(2, 6, 4)), jnp.float32)
+    cnt = jnp.ones((2, 6), jnp.float32)
+    wk = jnp.asarray(rng.normal(size=(2, 12, 4)), jnp.float32)
+    wv = jnp.asarray(rng.normal(size=(2, 12, 4)), jnp.float32)
+    val = jnp.ones((2, 12), jnp.float32)
+    a = refresh_clustered_cache(kc, vc, cnt, wk, wv, val, iters=4)
+    b = refresh_clustered_cache(kc, vc, cnt, wk, wv, val,
+                                stop=StopSpec(max_iters=4))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    with pytest.raises(TypeError):
+        refresh_clustered_cache(kc, vc, cnt, wk, wv, val, iters=4,
+                                stop=StopSpec())
+
+
+# ---------------------------------------------------------------------------
+# telemetry: stage_iters events
+# ---------------------------------------------------------------------------
+
+def _stage_iters(log):
+    return {e["stage"]: e for e in log.events
+            if e.get("name") == "stage_iters"}
+
+
+def test_fit_from_spec_logs_stage_iters():
+    from repro.core import fit_from_spec
+    x = _blobs(n=600, k=4)
+    spec = ClusterSpec.make(4, n_sub=4, compression=5, local_iters=6,
+                            global_iters=20, tol=1e-4)
+    log = RecordingLogger()
+    fit_from_spec(x, spec, jax.random.PRNGKey(0), logger=log)
+    ev = _stage_iters(log)
+    assert set(ev) == {"fold", "merge"}
+    merge = ev["merge"]
+    assert merge["iters_budget"] == 20
+    assert 1 <= merge["iters_run"] < 20
+    assert merge["iters_saved"] == 20 - merge["iters_run"]
+    fold = ev["fold"]
+    assert fold["iters_budget"] == 6 * 4
+    assert 1 <= fold["iters_run"] <= fold["iters_budget"]
+
+
+def test_fixed_budget_logs_zero_saved():
+    from repro.core import fit_from_spec
+    x = _blobs(n=600, k=4)
+    spec = ClusterSpec.make(4, n_sub=4, compression=5, local_iters=5,
+                            global_iters=9)
+    log = RecordingLogger()
+    fit_from_spec(x, spec, jax.random.PRNGKey(0), logger=log)
+    ev = _stage_iters(log)
+    assert ev["merge"]["iters_run"] == 9
+    assert ev["merge"]["iters_saved"] == 0
+    assert ev["fold"]["iters_run"] == 5 * 4
+
+
+# ---------------------------------------------------------------------------
+# workload configs expose the dial
+# ---------------------------------------------------------------------------
+
+def test_workload_spec_tol_passthrough():
+    from repro.configs.paper_clustering import workload_spec
+    base = workload_spec("iris")
+    assert base.local.stop is None and base.merge.stop is None
+    conv = workload_spec("iris", tol=1e-3, minibatch=32)
+    assert conv.local.stop.tol == 1e-3
+    assert conv.merge.stop.minibatch == 32
+    assert conv.stable_hash() != base.stable_hash()
+
+
+def test_quantize_leaf_stop_equals_iters_alias():
+    from repro.train.compress import quantize_leaf
+    g = jnp.asarray(np.random.default_rng(1).normal(size=(64, 16)),
+                    jnp.float32)
+    key = jax.random.PRNGKey(0)
+    a, _ = quantize_leaf(g, 8, key, iters=6)
+    b, _ = quantize_leaf(g, 8, key, stop=StopSpec(max_iters=6))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

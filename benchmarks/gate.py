@@ -68,6 +68,13 @@ TOLERANCES = {
     # couple of extra iterations while a disabled early exit (back to the
     # full budget, ~2.5x) must trip
     "iters_run":      ("lower",  "rel", 0.25, False),
+    # kernel tile autotune (bench_kernels.py --sweep): the winner/default
+    # ratio is same-machine so it is NOT calibration-normalized; a drop
+    # below 75% of baseline means a previously-winning tile stopped
+    # winning (kernel or tuner regression).  best_us is ordinary
+    # calibrated wall-clock (skipped under the interpreter like the rest).
+    "speedup_vs_default": ("higher", "rel", 0.25, False),
+    "best_us":            ("lower",  "rel", 0.50, True),
 }
 
 

@@ -108,6 +108,20 @@ def normalize(record, source: str = "<mem>") -> list:
             raise SkipArtifact(f"{source}: lloyd_step with no backends")
         return pts
 
+    if bench == "tune":
+        req = record.get("requested") or {}
+        kernel = record.get("kernel", "?")
+        shape = "M{m}_d{d}_K{k}".format(
+            m=req.get("m", "?"), d=req.get("d", "?"), k=req.get("k", "?"))
+        mode = record.get("mode", "?")
+        backend = record.get("backend", "?")
+        metrics = {m: float(record[m])
+                   for m in ("speedup_vs_default", "best_us", "default_us")
+                   if isinstance(record.get(m), (int, float))}
+        return [_point(_key(f"tune_{kernel}_{shape}", mode, backend),
+                       bench, f"tune_{kernel}_{shape}", metrics, record,
+                       source)]
+
     if bench == "api_facade_overhead":
         sh = record.get("shape") or {}
         name = "api_N{n}_d{d}_K{k}".format(

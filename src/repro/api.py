@@ -114,6 +114,16 @@ def plan(spec: ClusterSpec, data_shape: Optional[tuple] = None, *,
         get_partitioner(lvl.scheme)
         get_init(lvl.init)
     backend = get_backend(spec.execution.backend)
+    # tile-tuned backends resolve their schedule at plan time like every
+    # other registry decision: key the backend on the spec's merge K, and
+    # pull this job's tile config through the autotune cache layers into
+    # the in-process LRU so the first jit trace is a pure memory hit
+    if hasattr(backend, "with_k_hint"):
+        backend = backend.with_k_hint(spec.merge.k)
+        if data_shape is not None and len(data_shape) >= 2:
+            from repro.kernels import autotune
+            autotune.prewarm("lloyd", m=int(data_shape[0]),
+                             d=int(data_shape[1]), k=spec.merge.k)
     # telemetry resolves like the backend: the declarative string becomes a
     # live RunLogger exactly once, here
     run_logger = get_run_logger(logger if logger is not None

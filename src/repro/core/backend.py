@@ -18,7 +18,9 @@ Built-in backends:
   ``jnp``           pure-jnp reference (pairwise matrix + one-hot matmul)
   ``pallas``        unfused Pallas kernels (assign + centroid, two passes)
   ``pallas_fused``  the fused single-pass kernel (kernels/lloyd.py)
-  ``auto``          ``pallas_fused`` on TPU, ``jnp`` elsewhere (the Pallas
+  ``pallas_tuned``  the fused kernel with tile sizes resolved from the
+                    autotune cache (kernels/autotune.py) per shape/device
+  ``auto``          ``pallas_tuned`` on TPU, ``jnp`` elsewhere (the Pallas
                     interpreter is correctness-, not speed-, oriented)
 
 Selection: pass ``backend="..."`` (or an instance) through any k-means entry
@@ -211,6 +213,93 @@ class PallasFusedBackend(PallasBackend):
         return sums[:, :prep.d], counts, sse
 
 
+class PallasTunedBackend(PallasFusedBackend):
+    """The fused backend with tile sizes resolved from the autotune cache
+    (:mod:`repro.kernels.autotune`) instead of constructor constants.
+
+    Resolution is a host-side cache read on static shapes, so it is safe
+    at jit trace time and the backend instance itself never mutates —
+    structural ``__eq__``/``__hash__`` keep keying jit caches correctly.
+    The cache key needs a K the point-side ``prepare()`` cannot see, so
+    the planner threads ``spec.merge.k`` in as ``k_hint``
+    (:func:`with_k_hint`); ``block_m`` is keyed on that hint everywhere
+    (``prepare`` must pad with the same tile ``step`` later runs), while
+    ``block_k`` re-keys on the *actual* K of each ``step``/``assign``
+    call — different reduce levels reuse one prepared point set but get
+    their own K tiling.
+    """
+
+    name = "pallas_tuned"
+
+    # the K assumed when nobody supplied a hint (a mid-size merge); only
+    # the M/d shape bucket is sensitive to it through block_m, and every
+    # block_k decision re-keys on the real K anyway
+    DEFAULT_K_HINT = 256
+
+    def __init__(self, *, k_hint: int | None = None,
+                 interpret: bool | None = None):
+        self.k_hint = k_hint
+        self.interpret = interpret
+
+    def with_k_hint(self, k: int) -> "PallasTunedBackend":
+        """A copy keyed for merges of ``k`` clusters (returns ``self`` if
+        already so keyed — instances are immutable)."""
+        if k == self.k_hint:
+            return self
+        return PallasTunedBackend(k_hint=k, interpret=self.interpret)
+
+    def _config(self, m: int, d: int, k: int, dtype):
+        from repro.kernels import autotune
+        return autotune.lookup("lloyd", m=m, d=d, k=k, dtype=dtype)
+
+    def _hint(self) -> int:
+        return self.k_hint or self.DEFAULT_K_HINT
+
+    def prepare(self, x: Array, weights: Optional[Array] = None) -> Prepared:
+        from repro.kernels.ops import padded_layout
+        m, d = x.shape
+        cfg = self._config(m, d, self._hint(), x.dtype)
+        _, mp, dp = padded_layout(m, d, cfg.block_m)
+        xp = jnp.pad(x, ((0, mp - m), (0, dp - d)))
+        if weights is None:
+            wp = jnp.ones((m,), x.dtype)
+        else:
+            wp = weights.astype(x.dtype)
+        wp = jnp.pad(wp, (0, mp - m))
+        return Prepared(xp, wp, m, d)
+
+    def _block_m(self, prep: Prepared) -> int:
+        # keyed on the SAME hint as prepare(): the pad and the kernel tile
+        # must agree whatever K a later step() brings
+        from repro.kernels.ops import padded_layout
+        cfg = self._config(prep.m, prep.d, self._hint(), prep.xp.dtype)
+        return padded_layout(prep.m, prep.d, cfg.block_m)[0]
+
+    def _block_k(self, prep: Prepared, k: int) -> int:
+        return self._config(prep.m, prep.d, k, prep.xp.dtype).block_k
+
+    def assign(self, prep: Prepared, centers: Array) -> tuple[Array, Array]:
+        from repro.kernels import pad_to
+        from repro.kernels.assign import assign_argmin_pallas
+        k = centers.shape[0]
+        cp = self._pad_centers(prep, centers)
+        idx, dist = assign_argmin_pallas(
+            prep.xp, cp, block_m=self._block_m(prep),
+            block_k=min(self._block_k(prep, k), pad_to(k, 8)),
+            interpret=self.interpret)
+        return idx[:prep.m], dist[:prep.m]
+
+    def step(self, prep: Prepared, centers: Array
+             ) -> tuple[Array, Array, Array]:
+        from repro.kernels.lloyd import lloyd_step_pallas
+        cp = self._pad_centers(prep, centers)
+        sums, counts, sse, _, _ = lloyd_step_pallas(
+            prep.xp, prep.wp, cp, block_m=self._block_m(prep),
+            block_k=self._block_k(prep, centers.shape[0]),
+            interpret=self.interpret)
+        return sums[:, :prep.d], counts, sse
+
+
 class AssignFnBackend(LloydBackend):
     """Adapter for the legacy ``assign_fn`` callables — jnp statistics with
     a custom assignment step.  Exists so ``kmeans(assign_fn=...)`` keeps
@@ -232,6 +321,7 @@ _REGISTRY: dict[str, Callable[[], LloydBackend]] = {
     "jnp": LloydBackend,
     "pallas": PallasBackend,
     "pallas_fused": PallasFusedBackend,
+    "pallas_tuned": PallasTunedBackend,
 }
 
 
@@ -242,7 +332,7 @@ def register_backend(name: str, factory: Callable[[], LloydBackend]) -> None:
 
 
 def _resolve_auto() -> str:
-    return "pallas_fused" if jax.default_backend() == "tpu" else "jnp"
+    return "pallas_tuned" if jax.default_backend() == "tpu" else "jnp"
 
 
 def get_backend(spec: BackendSpec = None) -> LloydBackend:

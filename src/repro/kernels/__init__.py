@@ -8,6 +8,9 @@
   cluster_attn.py — decode attention over clustered KV centroids
   ops.py       — jit'd public wrappers (padding, dtype plumbing)
   ref.py       — pure-jnp oracles
+  tiles.py     — the shared tile-shape contract (clamps, TileError)
+  autotune.py  — shape/device-keyed tile-config search + caches
+  tune_table.py — committed per-device-kind tile defaults
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
 on CPU with ``interpret=True``; ``default_interpret()`` flips automatically.
@@ -29,7 +32,8 @@ def default_interpret() -> bool:
 from .ops import (assign_argmin, centroid_update, cluster_attn_decode,
                   lloyd_step, pad_to, pallas_assign_fn)  # noqa: E402
 from .scan import adc_scan, resolve_scan_backend  # noqa: E402
+from .tiles import TileError  # noqa: E402
 
 __all__ = ["default_interpret", "assign_argmin", "centroid_update",
            "cluster_attn_decode", "lloyd_step", "pad_to", "pallas_assign_fn",
-           "adc_scan", "resolve_scan_backend"]
+           "adc_scan", "resolve_scan_backend", "TileError"]

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiles import clamp_block_k, require_block_m
+
 NEG = -1
 _BIG = 3.0e38  # ~f32 max; used to mask padded center columns
 
@@ -66,14 +68,17 @@ def assign_argmin_pallas(
 
     Inputs must already be padded so M % block_m == 0, d % 128 == 0 and
     K % block_k == 0 *except* that ``k_actual`` masking handles ragged K;
-    :mod:`repro.kernels.ops` does the padding.
+    :mod:`repro.kernels.ops` does the padding.  An unpadded M raises a
+    :class:`repro.kernels.tiles.TileError` with the pad recipe, and
+    ``block_k`` clamps to the effective tile.
     """
     from . import default_interpret
     if interpret is None:
         interpret = default_interpret()
     m, d = x.shape
     k = c.shape[0]
-    assert m % block_m == 0, (m, block_m)
+    require_block_m(m, block_m, kernel="assign_argmin_pallas")
+    block_k = clamp_block_k(k, block_k)
     kp = -(-k // block_k) * block_k
     if kp != k:
         c = jnp.pad(c, ((0, kp - k), (0, 0)))

@@ -1,0 +1,525 @@
+"""Shape/device-keyed tile-config autotuner for the Pallas kernels.
+
+The kernels in this package are schedule-parameterised: ``block_m`` /
+``block_k`` for the Lloyd family (:mod:`.lloyd`, :mod:`.assign`,
+:mod:`.centroid`) and ``block_l`` for the ADC scan (:mod:`.scan`).  The
+*math* is tile-invariant — any config passing :mod:`.tiles` produces the
+same values — but throughput is not, and the best tile depends on the
+problem shape and the device.  This module finds and remembers the best
+config:
+
+  * :func:`lookup` — resolve a config for a shape **without ever
+    sweeping**.  Safe to call at jit trace time (it is a host-side dict
+    read on static shapes).  Four layers, first hit wins:
+
+      1. in-process LRU (this process's sweeps + prior lookups),
+      2. persistent JSON cache (``REPRO_TUNE_CACHE`` path — survives
+         processes; corrupt or missing files silently fall through),
+      3. the committed per-device-kind table (:mod:`.tune_table` — ships
+         with the package so CI and cold starts never pay a sweep),
+      4. the hardcoded per-kernel default.
+
+  * :func:`tune` — run the actual sweep for one ``(kernel, shape,
+    dtype)``: generate candidates, **dedupe them through the clamp rules
+    of** :mod:`.tiles` (so ``block_k=256`` and ``block_k=512`` at ``k=10``
+    collapse to the one kernel they both are), **verify every candidate's
+    numerics against the jnp oracle** (:mod:`.ref`) before it may win,
+    time the survivors with warmup + ``block_until_ready`` + a
+    median-of-iters window (the telemetry :class:`MedianWindow` idiom),
+    and cache the winner.  The hardcoded default config is always included
+    as a candidate, so the winner is never slower than the default on the
+    machine that swept.  ``time_fn=`` injects a deterministic timer for
+    tests.
+
+Cache entries are keyed ``kernel|shape-bucket|dtype|device_kind|backend``
+where the shape bucket rounds M/K/L up to powers of two and d to the
+128-lane pad — nearby shapes share a config instead of each paying a
+sweep.  Nothing here is jitted and nothing imports at module scope beyond
+jax itself; the kernel modules are pulled in lazily by the sweep cases.
+"""
+from __future__ import annotations
+
+import collections
+import json
+import os
+import pathlib
+import tempfile
+import time
+from typing import Callable, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .tiles import clamp_block_k, clamp_block_l, clamp_block_m, pad_to
+
+ENV_VAR = "REPRO_TUNE_CACHE"
+CACHE_SCHEMA = 1
+KERNELS = ("lloyd", "assign", "centroid", "scan")
+
+_MEM_MAX = 256   # in-process LRU bound: keys are tiny, evictions are rare
+
+
+class TileConfig(NamedTuple):
+    """One schedule point.  Unused axes stay 0 (``centroid`` has no K tile,
+    ``scan`` only has L) so configs compare and serialize uniformly."""
+    block_m: int = 0
+    block_k: int = 0
+    block_l: int = 0
+
+    def to_dict(self) -> dict:
+        return {f: int(v) for f, v in zip(self._fields, self) if v}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TileConfig":
+        if not isinstance(d, dict):
+            raise ValueError(f"TileConfig entry must be a dict, got {d!r}")
+        unknown = set(d) - set(cls._fields)
+        if unknown:
+            raise ValueError(f"TileConfig entry has unknown fields {unknown}")
+        vals = {}
+        for f in cls._fields:
+            v = d.get(f, 0)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise ValueError(f"TileConfig.{f} must be a non-negative "
+                                 f"int, got {v!r}")
+            vals[f] = v
+        return cls(**vals)
+
+
+# the hardcoded layer-4 fallback — exactly the historical constants, so a
+# process with no cache, no table match and no sweep behaves as before
+DEFAULTS: dict = {
+    "lloyd": TileConfig(block_m=256, block_k=256),
+    "assign": TileConfig(block_m=256, block_k=256),
+    "centroid": TileConfig(block_m=512),
+    "scan": TileConfig(block_l=256),
+}
+
+# the default sweep grids; --sweep can override per run
+CANDIDATES: dict = {
+    "lloyd": tuple(TileConfig(block_m=bm, block_k=bk)
+                   for bm in (128, 256, 512, 1024)
+                   for bk in (64, 128, 256, 512)),
+    "assign": tuple(TileConfig(block_m=bm, block_k=bk)
+                    for bm in (128, 256, 512, 1024)
+                    for bk in (64, 128, 256, 512)),
+    "centroid": tuple(TileConfig(block_m=bm)
+                      for bm in (128, 256, 512, 1024)),
+    "scan": tuple(TileConfig(block_l=bl)
+                  for bl in (64, 128, 256, 512, 1024)),
+}
+
+
+# ---------------------------------------------------------------------------
+# Keys: shape buckets and the cache key
+# ---------------------------------------------------------------------------
+
+def bucket_pow2(n: int) -> int:
+    """Round up to the next power of two (>= 1)."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+_DIMS = {"lloyd": ("m", "d", "k"), "assign": ("m", "d", "k"),
+         "centroid": ("m", "d", "k"), "scan": ("b", "l", "msub", "c")}
+
+
+def _check_dims(kernel: str, dims: dict) -> dict:
+    if kernel not in KERNELS:
+        raise ValueError(f"unknown tunable kernel {kernel!r}; "
+                         f"known: {KERNELS}")
+    want = _DIMS[kernel]
+    missing = [d for d in want if d not in dims]
+    extra = sorted(set(dims) - set(want))
+    if missing or extra:
+        raise ValueError(f"{kernel}: needs dims {want}, missing {missing}, "
+                         f"unexpected {extra}")
+    out = {d: int(dims[d]) for d in want}
+    bad = [d for d, v in out.items() if v < 1]
+    if bad:
+        raise ValueError(f"{kernel}: dims must be >= 1, got "
+                         f"{ {d: out[d] for d in bad} }")
+    return out
+
+
+def shape_bucket(kernel: str, **dims) -> str:
+    """Bucketed shape string: M/K/L/B round up to powers of two, d to the
+    128-lane pad, the (small, static) PQ geometry exactly — nearby shapes
+    share one cache entry instead of each paying a sweep."""
+    dims = _check_dims(kernel, dims)
+    if kernel == "scan":
+        return (f"B{bucket_pow2(dims['b'])}_L{bucket_pow2(dims['l'])}"
+                f"_m{dims['msub']}_C{dims['c']}")
+    return (f"M{bucket_pow2(dims['m'])}_d{pad_to(dims['d'], 128)}"
+            f"_K{bucket_pow2(dims['k'])}")
+
+
+def device_info() -> tuple:
+    """(device_kind, backend) of the default device — the hardware half of
+    the cache key."""
+    dev = jax.devices()[0]
+    return str(dev.device_kind), str(jax.default_backend())
+
+
+def cache_key(kernel: str, *, dtype=jnp.float32,
+              device_kind: Optional[str] = None,
+              backend: Optional[str] = None, **dims) -> str:
+    """``kernel|bucket|dtype|device_kind|backend`` — the one key every
+    cache layer shares."""
+    bucket = shape_bucket(kernel, **dims)
+    if device_kind is None or backend is None:
+        dk, bk = device_info()
+        device_kind = device_kind if device_kind is not None else dk
+        backend = backend if backend is not None else bk
+    return (f"{kernel}|{bucket}|{jnp.dtype(dtype).name}"
+            f"|{device_kind}|{backend}")
+
+
+# ---------------------------------------------------------------------------
+# Cache layers
+# ---------------------------------------------------------------------------
+
+_MEM: "collections.OrderedDict[str, TileConfig]" = collections.OrderedDict()
+_DISK: dict = {}    # str(path) -> {key: TileConfig}
+
+
+def _mem_get(key: str) -> Optional[TileConfig]:
+    cfg = _MEM.get(key)
+    if cfg is not None:
+        _MEM.move_to_end(key)
+    return cfg
+
+
+def _mem_put(key: str, cfg: TileConfig) -> None:
+    _MEM[key] = cfg
+    _MEM.move_to_end(key)
+    while len(_MEM) > _MEM_MAX:
+        _MEM.popitem(last=False)
+
+
+def cache_path(path: "str | os.PathLike | None" = None
+               ) -> Optional[pathlib.Path]:
+    """The persistent cache location: an explicit ``path`` wins, else the
+    ``REPRO_TUNE_CACHE`` env var; ``None`` disables the disk layer."""
+    p = path if path is not None else os.environ.get(ENV_VAR)
+    return pathlib.Path(p) if p else None
+
+
+def _disk_entries(p: pathlib.Path, *, reload: bool = False) -> dict:
+    """Parsed entries of one persistent cache file.  Corrupt, partial, or
+    missing files yield ``{}`` — the contract is that a bad cache can only
+    ever cost a sweep, never an error."""
+    key = str(p)
+    if not reload and key in _DISK:
+        return _DISK[key]
+    entries: dict = {}
+    try:
+        doc = json.loads(p.read_text())
+        if isinstance(doc, dict):
+            for k, v in (doc.get("entries") or {}).items():
+                try:
+                    entries[str(k)] = TileConfig.from_dict(v)
+                except ValueError:
+                    continue    # skip the bad entry, keep the good ones
+    except (OSError, json.JSONDecodeError, ValueError, TypeError,
+            AttributeError):
+        entries = {}
+    _DISK[key] = entries
+    return entries
+
+
+def save_entry(key: str, cfg: TileConfig,
+               path: "str | os.PathLike | None" = None) -> bool:
+    """Merge one winner into the persistent cache (atomic
+    write-temp-then-replace).  No-op (returns False) when no cache path is
+    configured."""
+    p = cache_path(path)
+    if p is None:
+        return False
+    entries = dict(_disk_entries(p, reload=True))
+    entries[key] = cfg
+    doc = {"schema": CACHE_SCHEMA,
+           "entries": {k: c.to_dict() for k, c in sorted(entries.items())}}
+    p.parent.mkdir(parents=True, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=str(p.parent), prefix=p.name + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+        os.replace(tmp, p)
+    except OSError:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        return False
+    _DISK[str(p)] = entries
+    return True
+
+
+def clear_caches() -> None:
+    """Drop the in-process LRU and the parsed-disk-file memo (tests; also
+    the hook for 'the env var changed mid-process')."""
+    _MEM.clear()
+    _DISK.clear()
+
+
+def lookup(kernel: str, *, dtype=jnp.float32,
+           device_kind: Optional[str] = None,
+           backend: Optional[str] = None,
+           path: "str | os.PathLike | None" = None,
+           with_source: bool = False, **dims):
+    """Resolve a :class:`TileConfig` for a shape — never sweeps, so it is
+    safe anywhere, including inside a jit trace (host-side dict read on
+    static shapes).  ``with_source=True`` returns ``(config, source)``
+    where source is ``"memory" | "disk" | "table" | "default"``."""
+    key = cache_key(kernel, dtype=dtype, device_kind=device_kind,
+                    backend=backend, **dims)
+    cfg = _mem_get(key)
+    if cfg is not None:
+        return (cfg, "memory") if with_source else cfg
+    p = cache_path(path)
+    if p is not None:
+        cfg = _disk_entries(p).get(key)
+        if cfg is not None:
+            _mem_put(key, cfg)
+            return (cfg, "disk") if with_source else cfg
+    from . import tune_table
+    dk = device_kind if device_kind is not None else device_info()[0]
+    cfg = tune_table.load_default(kernel, dk)
+    if cfg is not None:
+        _mem_put(key, cfg)
+        return (cfg, "table") if with_source else cfg
+    cfg = DEFAULTS[kernel]
+    _mem_put(key, cfg)
+    return (cfg, "default") if with_source else cfg
+
+
+# ---------------------------------------------------------------------------
+# The sweep: cases, dedupe, verification, timing
+# ---------------------------------------------------------------------------
+
+class Case(NamedTuple):
+    """One sweep target: ``run(config)`` executes the kernel at a config,
+    ``ref()`` the jnp oracle; both return a tuple of arrays to compare."""
+    run: Callable[[TileConfig], tuple]
+    ref: Callable[[], tuple]
+
+
+def _case_lloyd(dims: dict, dtype, seed: int, interpret) -> Case:
+    from . import ops, ref
+    m, d, k = dims["m"], dims["d"], dims["k"]
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, d), dtype)
+    w = jnp.ones((m,), dtype)
+    c = jax.random.normal(kc, (k, d), dtype)
+
+    def run(cfg: TileConfig) -> tuple:
+        return tuple(ops.lloyd_step(x, w, c, block_m=cfg.block_m,
+                                    block_k=cfg.block_k,
+                                    interpret=interpret))
+
+    return Case(run, lambda: tuple(ref.lloyd_step_ref(x, w, c)))
+
+
+def _case_assign(dims: dict, dtype, seed: int, interpret) -> Case:
+    from . import ops, ref
+    m, d, k = dims["m"], dims["d"], dims["k"]
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, d), dtype)
+    c = jax.random.normal(kc, (k, d), dtype)
+
+    def run(cfg: TileConfig) -> tuple:
+        return tuple(ops.assign_argmin(x, c, block_m=cfg.block_m,
+                                       block_k=cfg.block_k,
+                                       interpret=interpret))
+
+    return Case(run, lambda: tuple(ref.assign_argmin_ref(x, c)))
+
+
+def _case_centroid(dims: dict, dtype, seed: int, interpret) -> Case:
+    from . import ops, ref
+    m, d, k = dims["m"], dims["d"], dims["k"]
+    kx, ki, kw = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jax.random.normal(kx, (m, d), dtype)
+    idx = jax.random.randint(ki, (m,), 0, k, jnp.int32)
+    w = jax.random.uniform(kw, (m,), jnp.float32, 0.5, 1.5).astype(dtype)
+
+    def run(cfg: TileConfig) -> tuple:
+        return tuple(ops.centroid_update(x, idx, w, k,
+                                         block_m=cfg.block_m,
+                                         interpret=interpret))
+
+    return Case(run, lambda: tuple(ref.centroid_update_ref(x, idx, w, k)))
+
+
+def _case_scan(dims: dict, dtype, seed: int, interpret) -> Case:
+    from . import ref, scan
+    b, l, msub, c = dims["b"], dims["l"], dims["msub"], dims["c"]
+    kl, kc = jax.random.split(jax.random.PRNGKey(seed))
+    luts = jax.random.normal(kl, (b, msub, c), dtype)
+    codes = jax.random.randint(kc, (b, l, msub), 0, c, jnp.int32)
+
+    def run(cfg: TileConfig) -> tuple:
+        return (scan.adc_scan_pallas(luts, codes, block_l=cfg.block_l,
+                                     interpret=interpret),)
+
+    return Case(run, lambda: (ref.adc_scan_ref(luts, codes),))
+
+
+# module-level so tests can monkeypatch a kernel's sweep case
+CASES: dict = {"lloyd": _case_lloyd, "assign": _case_assign,
+               "centroid": _case_centroid, "scan": _case_scan}
+
+
+def effective_config(kernel: str, cfg: TileConfig, **dims) -> TileConfig:
+    """The config the kernel will *actually* run after the :mod:`.tiles`
+    clamps — the dedupe identity of a candidate, and the form every cache
+    stores (so "the tuner picked 256 but the kernel ran 8" cannot
+    happen)."""
+    dims = _check_dims(kernel, dims)
+    if kernel in ("lloyd", "assign"):
+        return TileConfig(block_m=clamp_block_m(dims["m"], cfg.block_m),
+                          block_k=clamp_block_k(dims["k"], cfg.block_k))
+    if kernel == "centroid":
+        return TileConfig(block_m=clamp_block_m(dims["m"], cfg.block_m))
+    return TileConfig(block_l=clamp_block_l(dims["l"], cfg.block_l))
+
+
+def _verify(got: tuple, want: tuple, *, rtol: float, atol: float
+            ) -> Optional[str]:
+    """None when every output matches the oracle (ints exactly, floats to
+    tolerance); else a short reason string — the rejection note."""
+    if len(got) != len(want):
+        return f"arity {len(got)} != oracle {len(want)}"
+    for i, (g, wv) in enumerate(zip(got, want)):
+        g = np.asarray(g)
+        wv = np.asarray(wv)
+        if g.shape != wv.shape:
+            return f"output[{i}] shape {g.shape} != {wv.shape}"
+        if np.issubdtype(wv.dtype, np.integer):
+            if not np.array_equal(g, wv):
+                bad = int(np.sum(g != wv))
+                return f"output[{i}]: {bad} int mismatches"
+        elif not np.allclose(g, wv, rtol=rtol, atol=atol):
+            err = float(np.max(np.abs(g.astype(np.float64)
+                                      - wv.astype(np.float64))))
+            return f"output[{i}]: max abs err {err:.3g} > tol"
+    return None
+
+
+def _median_time(run_once: Callable[[], object], *, warmup: int,
+                 iters: int) -> float:
+    from repro.telemetry.logger import MedianWindow
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(run_once())
+    win = MedianWindow(max(iters, 1))
+    med = 0.0
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run_once())
+        med = win.push(time.perf_counter() - t0)
+    return float(med)
+
+
+class Candidate(NamedTuple):
+    config: TileConfig        # effective (clamped) form
+    requested: TileConfig     # as it appeared in the grid
+    time_s: Optional[float]   # None when rejected before timing
+    ok: bool
+    note: str                 # "" | rejection reason
+
+
+class TuneResult(NamedTuple):
+    kernel: str
+    key: str
+    config: TileConfig
+    best_time_s: float
+    default_time_s: float
+    speedup_vs_default: float
+    candidates: tuple         # tuple[Candidate, ...], sweep order
+
+
+def tune(kernel: str, *, dtype=jnp.float32,
+         candidates: Optional[Sequence[TileConfig]] = None,
+         seed: int = 0, warmup: int = 1, iters: int = 3,
+         rtol: float = 1e-4, atol: float = 1e-4,
+         time_fn: Optional[Callable[[Callable[[], object]], float]] = None,
+         interpret: Optional[bool] = None, save: bool = True,
+         path: "str | os.PathLike | None" = None,
+         device_kind: Optional[str] = None,
+         backend: Optional[str] = None, **dims) -> TuneResult:
+    """Sweep tile configs for one ``(kernel, shape, dtype)`` and cache the
+    winner.
+
+    Candidates are deduped through :func:`effective_config`, each survivor
+    is verified against the jnp oracle *before* it may be timed (numeric
+    mismatch -> rejected, recorded in the result), and timing is
+    warmup + ``block_until_ready`` + median-of-``iters``.  ``time_fn(fn)``
+    replaces the timer entirely (tests inject a deterministic stub).  The
+    per-kernel default config always joins the sweep, so
+    ``speedup_vs_default >= 1.0`` on the machine that swept.  Ties break
+    on sweep order, so a fixed ``time_fn`` makes the choice deterministic.
+    """
+    dims = _check_dims(kernel, dims)
+    key = cache_key(kernel, dtype=dtype, device_kind=device_kind,
+                    backend=backend, **dims)
+    case = CASES[kernel](dims, dtype, seed, interpret)
+    want = jax.block_until_ready(case.ref())
+
+    grid = list(candidates if candidates is not None else CANDIDATES[kernel])
+    default_eff = effective_config(kernel, DEFAULTS[kernel], **dims)
+    if all(effective_config(kernel, c, **dims) != default_eff
+           for c in grid):
+        grid.append(DEFAULTS[kernel])   # the >=1.0x-vs-default contract
+
+    seen: dict = {}
+    swept: list = []
+    for req in grid:
+        eff = effective_config(kernel, req, **dims)
+        if eff in seen:
+            continue
+        seen[eff] = req
+        try:
+            got = jax.block_until_ready(case.run(eff))
+        except Exception as e:    # noqa: BLE001 — a failing candidate is
+            # data, not an error: record and move on
+            swept.append(Candidate(eff, req, None, False,
+                                   f"raised {type(e).__name__}: {e}"))
+            continue
+        bad = _verify(tuple(got), tuple(want), rtol=rtol, atol=atol)
+        if bad is not None:
+            swept.append(Candidate(eff, req, None, False, bad))
+            continue
+        if time_fn is not None:
+            t = float(time_fn(lambda: case.run(eff)))
+        else:
+            t = _median_time(lambda: case.run(eff), warmup=warmup,
+                             iters=iters)
+        swept.append(Candidate(eff, req, t, True, ""))
+
+    timed = [c for c in swept if c.ok]
+    if not timed:
+        reasons = "; ".join(f"{c.config}: {c.note}" for c in swept)
+        raise RuntimeError(f"tune({kernel}): every candidate was rejected "
+                           f"— {reasons}")
+    best = min(timed, key=lambda c: (c.time_s, swept.index(c)))
+    default_c = next((c for c in timed if c.config == default_eff), None)
+    default_t = default_c.time_s if default_c is not None else best.time_s
+    result = TuneResult(
+        kernel=kernel, key=key, config=best.config,
+        best_time_s=best.time_s, default_time_s=default_t,
+        speedup_vs_default=(default_t / best.time_s if best.time_s > 0
+                            else 1.0),
+        candidates=tuple(swept))
+    _mem_put(key, best.config)
+    if save:
+        save_entry(key, best.config, path=path)
+    return result
+
+
+def prewarm(kernel: str, *, dtype=jnp.float32, **dims) -> TileConfig:
+    """Pull a shape's config through the layers into the in-process LRU —
+    ``plan()`` calls this so the first jit trace is a pure memory hit."""
+    return lookup(kernel, dtype=dtype, **dims)

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiles import require_block_m
+
 
 def _centroid_kernel(x_ref, idx_ref, w_ref, sums_ref, counts_ref, *, k: int):
     i = pl.program_id(0)
@@ -45,13 +47,14 @@ def centroid_update_pallas(
     """Weighted per-cluster sums and counts.
 
     (M, d) points, (M,) int32 assignment, (M,) weights -> ((K, d), (K,)).
-    M must be a multiple of block_m (ops.py pads with w=0 rows).
+    M must be a multiple of block_m (ops.py pads with w=0 rows; an
+    unpadded M raises a :class:`repro.kernels.tiles.TileError`).
     """
     from . import default_interpret
     if interpret is None:
         interpret = default_interpret()
     m, d = x.shape
-    assert m % block_m == 0, (m, block_m)
+    require_block_m(m, block_m, kernel="centroid_update_pallas")
     grid = (m // block_m,)
 
     sums, counts = pl.pallas_call(

@@ -22,7 +22,9 @@ single-pass sufficient-statistics aggregation of Scalable K-Means++
 
 Inputs must be padded (M to block_m, d to 128) by the caller — the
 ``LloydBackend`` registry in :mod:`repro.core.backend` pads once per
-``kmeans()`` call, outside the iteration loop.
+``kmeans()`` call, outside the iteration loop.  Tile sizes default to the
+committed per-device table; :mod:`repro.kernels.autotune` sweeps better
+ones per (M, d, K) shape bucket.
 """
 from __future__ import annotations
 
@@ -31,6 +33,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .tiles import clamp_block_k, require_block_m
 
 _BIG = 3.0e38  # ~f32 max; masks padded center columns out of the argmin
 
@@ -108,15 +112,19 @@ def lloyd_step_pallas(
     caller divides and applies the empty-cluster fix-up), so the same
     primitive serves the single-device loop and the distributed merge
     (psum the raw stats, then divide).  M must be a multiple of block_m and
-    d a multiple of 128 (pad with w=0 rows); ragged K is masked in-kernel.
+    d a multiple of 128 (pad with w=0 rows — a shape that isn't raises a
+    :class:`repro.kernels.tiles.TileError` with the recipe); ragged K is
+    masked in-kernel and ``block_k`` clamps to the effective tile
+    (:func:`repro.kernels.tiles.clamp_block_k`), so ``k < 8`` always runs
+    one 8-wide tile whatever was requested.
     """
     from . import default_interpret
     if interpret is None:
         interpret = default_interpret()
     m, d = x.shape
     k = c.shape[0]
-    assert m % block_m == 0, (m, block_m)
-    block_k = min(block_k, -(-k // 8) * 8)
+    require_block_m(m, block_m, kernel="lloyd_step_pallas")
+    block_k = clamp_block_k(k, block_k)
     kp = -(-k // block_k) * block_k
     if kp != k:
         c = jnp.pad(c, ((0, kp - k), (0, 0)))

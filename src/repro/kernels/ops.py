@@ -17,19 +17,16 @@ import jax.numpy as jnp
 from .assign import assign_argmin_pallas
 from .centroid import centroid_update_pallas
 from .lloyd import lloyd_step_pallas
-
-
-def pad_to(n: int, mult: int) -> int:
-    """Smallest multiple of ``mult`` that is >= ``n``."""
-    return -(-n // mult) * mult
+from .tiles import LANE, clamp_block_m, pad_to  # noqa: F401  (re-export)
 
 
 def padded_layout(m: int, d: int, block_m: int) -> tuple[int, int, int]:
     """The kernels' shared alignment rule, in one place: clamp ``block_m``
-    to the 8-sublane minimum, pad M to whole blocks and d to the 128-lane
-    tile.  Returns (bm, mp, dp)."""
-    bm = min(block_m, pad_to(m, 8))
-    return bm, pad_to(m, bm), pad_to(d, 128)
+    to the effective tile (:func:`repro.kernels.tiles.clamp_block_m` — the
+    same rule the autotuner dedupes candidates through), pad M to whole
+    blocks and d to the 128-lane tile.  Returns (bm, mp, dp)."""
+    bm = clamp_block_m(m, block_m)
+    return bm, pad_to(m, bm), pad_to(d, LANE)
 
 
 @functools.partial(jax.jit, static_argnames=("block_m", "block_k", "interpret"))

@@ -68,13 +68,19 @@ def _adc_kernel(codes_ref, lut_ref, out_ref, *, m: int, c: int):
 
 
 def adc_scan_pallas(luts: jax.Array, codes: jax.Array, *,
-                    block_l: int = 256,
+                    block_l: int | None = None,
                     interpret: bool | None = None) -> jax.Array:
     """Pallas ADC scan: (B, m, C) LUTs + (B, L, m) int codes -> (B, L) f32.
 
     ``L`` is padded to a multiple of ``block_l`` internally (padded rows
     scan code 0 and are sliced off — the caller masks invalid candidate
-    slots itself, exactly as with the jnp reference).
+    slots itself, exactly as with the jnp reference).  ``block_l=None``
+    consults the autotune cache for this shape
+    (:func:`repro.kernels.autotune.lookup` — a host-side read, safe under
+    jit); an explicit value is clamped to the effective tile
+    (:func:`repro.kernels.tiles.clamp_block_l`) and pins the schedule.
+    Either way the values are identical — tiling changes schedule, never
+    math.
     """
     from . import default_interpret
     if interpret is None:
@@ -85,7 +91,12 @@ def adc_scan_pallas(luts: jax.Array, codes: jax.Array, *,
         raise ValueError(f"adc_scan: codes {codes.shape} do not match "
                          f"luts {luts.shape}")
     codes = codes.astype(jnp.int32)
-    block_l = min(block_l, max(8, -(-l // 8) * 8))
+    if block_l is None:
+        from .autotune import lookup
+        block_l = lookup("scan", b=b, l=l, msub=m, c=c,
+                         dtype=luts.dtype).block_l
+    from .tiles import clamp_block_l
+    block_l = clamp_block_l(l, block_l)
     lp = -(-l // block_l) * block_l
     if lp != l:
         codes = jnp.pad(codes, ((0, 0), (0, lp - l), (0, 0)))
@@ -122,10 +133,11 @@ def resolve_scan_backend(name: str | None = None) -> str:
 
 
 def adc_scan(luts: jax.Array, codes: jax.Array, *,
-             backend: str | None = None, block_l: int = 256,
+             backend: str | None = None, block_l: int | None = None,
              interpret: bool | None = None) -> jax.Array:
     """Backend-dispatched ADC scan (see :func:`adc_scan_jnp` /
-    :func:`adc_scan_pallas`); both return identical (B, L) f32 distances."""
+    :func:`adc_scan_pallas`); both return identical (B, L) f32 distances.
+    ``block_l=None`` lets the autotune cache pick the candidate tile."""
     name = resolve_scan_backend(backend)
     if name == "pallas":
         return adc_scan_pallas(luts, codes, block_l=block_l,

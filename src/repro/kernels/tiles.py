@@ -1,0 +1,85 @@
+"""Shared tile-shape rules for the Pallas kernels — ONE contract for the
+kernels, the ``LloydBackend`` padding, and the autotuner.
+
+Every kernel in this package tiles its inputs with the same three rules:
+
+  * the point axis M is walked ``block_m`` rows at a time and must arrive
+    padded to a whole number of blocks (``require_block_m`` raises a typed
+    :class:`TileError` with the pad recipe instead of a bare assert);
+  * the center axis K is tiled ``block_k`` at a time, clamped to the
+    8-sublane minimum and to the padded K extent (``clamp_block_k`` — the
+    *effective* tile, so a tuner sweeping ``block_k`` candidates can dedupe
+    configs that collapse to the same kernel);
+  * the candidate axis L of the ADC scan clamps the same way
+    (``clamp_block_l``).
+
+:mod:`repro.kernels.autotune` keys its config cache on the clamped values
+returned here, which is what makes "the tuner picked 256 but the kernel ran
+8" impossible by construction.
+"""
+from __future__ import annotations
+
+SUBLANE = 8     # f32 sublane minimum: no tile may be thinner than this
+LANE = 128      # the last-axis register width every d pads to
+
+
+def pad_to(n: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` that is >= ``n``."""
+    return -(-n // mult) * mult
+
+
+class TileError(ValueError):
+    """A kernel was handed a shape its tile config cannot cover.
+
+    Subclasses ``ValueError`` so existing ``except ValueError`` call sites
+    keep working; carries the offending ``(extent, block)`` pair."""
+
+    def __init__(self, message: str, *, extent: int = 0, block: int = 0):
+        super().__init__(message)
+        self.extent = extent
+        self.block = block
+
+
+def require_block_m(m: int, block_m: int, *, kernel: str = "kernel") -> None:
+    """The padding contract: M must be a whole number of ``block_m`` rows.
+
+    Raises :class:`TileError` (a ``ValueError``) with the pad recipe —
+    callers that hit this forgot to route through
+    ``LloydBackend.prepare`` / ``repro.kernels.ops.padded_layout``."""
+    if block_m < 1:
+        raise TileError(
+            f"{kernel}: block_m must be >= 1, got {block_m}",
+            extent=m, block=block_m)
+    if m % block_m:
+        raise TileError(
+            f"{kernel}: M={m} is not a multiple of block_m={block_m} — pad "
+            f"the points to {pad_to(m, block_m)} rows with zero-weight "
+            f"padding (repro.kernels.ops.padded_layout / "
+            f"LloydBackend.prepare do this once per fit), or pass "
+            f"block_m<= {m} that divides M",
+            extent=m, block=block_m)
+
+
+def clamp_block_m(m: int, block_m: int) -> int:
+    """Effective M tile: no wider than the 8-padded point count (a 6-row
+    problem runs one 8-row tile however large the requested block is)."""
+    return max(SUBLANE, min(block_m, pad_to(max(m, 1), SUBLANE)))
+
+
+def clamp_block_k(k: int, block_k: int) -> int:
+    """Effective K tile for the assignment/Lloyd kernels.
+
+    The kernel pads K up to a whole number of ``block_k`` columns and masks
+    the tail, so a tile wider than the padded K extent just wastes VMEM —
+    clamp to ``pad_to(k, 8)``; and nothing may drop below the 8-sublane
+    minimum, so ``k < 8`` always runs one 8-wide tile (``block_k=4`` is
+    raised to 8, ``block_k=256`` is lowered to 8 — both end up the SAME
+    kernel, which is why the autotuner dedupes candidates through this
+    function instead of sweeping phantom configs)."""
+    return max(SUBLANE, min(block_k, pad_to(max(k, 1), SUBLANE)))
+
+
+def clamp_block_l(l: int, block_l: int) -> int:
+    """Effective candidate-axis tile for the ADC scan kernel — same rule
+    as :func:`clamp_block_k` on the L axis."""
+    return max(SUBLANE, min(block_l, pad_to(max(l, 1), SUBLANE)))

@@ -155,6 +155,104 @@ def model_flops(cfg, shape, kind: str) -> float:
     return 2.0 * n_active * shape.global_batch  # decode: one token per seq
 
 
+# ---------------------------------------------------------------------------
+# Per-kernel analytic roofline models — the predicted side of the autotune
+# campaign (benchmarks/bench_kernels.py --sweep reports predicted vs
+# measured per accepted tile config).
+# ---------------------------------------------------------------------------
+
+# per-chip roofs by device-kind substring (first match wins, "*" last);
+# values are peak dense FLOP/s and HBM bandwidth
+DEVICE_ROOFS = {
+    "TPU v5 lite": {"peak_flops": PEAK_BF16, "hbm_bw": HBM_BW},
+    "TPU v4": {"peak_flops": 275e12, "hbm_bw": 1228e9},
+    "*": {"peak_flops": PEAK_BF16, "hbm_bw": HBM_BW},
+}
+
+
+def device_roof(device_kind: Optional[str] = None) -> dict:
+    """Roof constants for a device kind (substring match, ``"*"``
+    fallback)."""
+    if device_kind:
+        needle = device_kind.lower()
+        for pat, roof in DEVICE_ROOFS.items():
+            if pat != "*" and pat.lower() in needle:
+                return roof
+    return DEVICE_ROOFS["*"]
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // max(b, 1))
+
+
+def kernel_cost(kernel: str, *, dtype_bytes: int = 4, block_m: int = 256,
+                block_l: int = 256, **dims) -> PartCost:
+    """Analytic FLOPs/HBM-bytes for one Pallas kernel invocation.
+
+    The byte model is tile-aware where the schedule changes traffic: the
+    Lloyd/assign kernels re-stream the (K, d) centers once per M tile
+    (``x`` itself is streamed once — revisited blocks are not refetched),
+    so a wider ``block_m`` cuts center traffic; the ADC scan re-reads each
+    group's LUT once per L tile.  FLOPs are schedule-invariant.
+    """
+    if kernel in ("lloyd", "assign"):
+        m, d, k = dims["m"], dims["d"], dims["k"]
+        # distance cross-term matmul + distance assembly (+ the fused
+        # one-hot accumulation matmul for lloyd)
+        flops = 2.0 * m * k * d + 3.0 * m * k
+        if kernel == "lloyd":
+            flops += 2.0 * m * k * d + 2.0 * m * k
+        n_mtiles = _ceil_div(m, block_m)
+        rbytes = dtype_bytes * (m * d + k * d * n_mtiles)
+        wbytes = 8.0 * m                       # idx (i32) + dist (f32)
+        if kernel == "lloyd":
+            rbytes += dtype_bytes * m          # weights
+            wbytes += 4.0 * (k * d + k + 1)    # sums + counts + sse
+        return PartCost(flops, rbytes + wbytes, 0.0)
+    if kernel == "centroid":
+        m, d, k = dims["m"], dims["d"], dims["k"]
+        flops = 2.0 * m * k * d + 2.0 * m * k  # one-hot matmul + counts
+        rbytes = dtype_bytes * (m * d + m) + 4.0 * m
+        wbytes = 4.0 * k * (d + 1)
+        return PartCost(flops, rbytes + wbytes, 0.0)
+    if kernel == "scan":
+        b, l, msub, c = dims["b"], dims["l"], dims["msub"], dims["c"]
+        flops = 2.0 * b * l * msub * c         # one-hot matvec per subspace
+        n_ltiles = _ceil_div(l, block_l)
+        rbytes = 4.0 * b * l * msub + dtype_bytes * b * msub * c * n_ltiles
+        wbytes = 4.0 * b * l
+        return PartCost(flops, rbytes + wbytes, 0.0)
+    raise ValueError(f"kernel_cost: unknown kernel {kernel!r}")
+
+
+def predicted_vs_measured(kernel: str, measured_s: float, *,
+                          device_kind: Optional[str] = None,
+                          dtype_bytes: int = 4, block_m: int = 256,
+                          block_l: int = 256, **dims) -> dict:
+    """One accepted sweep config -> its roofline report: predicted time
+    (max of the compute and memory terms on this device's roofs), the
+    dominant term, and measured/predicted efficiency.  Interpret-mode
+    numbers make ``efficiency`` meaningless but the predicted side still
+    documents what the config *should* cost on hardware."""
+    cost = kernel_cost(kernel, dtype_bytes=dtype_bytes, block_m=block_m,
+                       block_l=block_l, **dims)
+    roof = device_roof(device_kind)
+    compute_s = cost.flops / roof["peak_flops"]
+    memory_s = cost.bytes / roof["hbm_bw"]
+    predicted_s = max(compute_s, memory_s)
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "predicted_s": predicted_s,
+        "dominant": "compute" if compute_s >= memory_s else "memory",
+        "measured_s": float(measured_s),
+        "efficiency": (predicted_s / measured_s
+                       if measured_s > 0 else 0.0),
+    }
+
+
 def f32_upconvert_bytes(hlo_text: str, sds_spec_pairs, mesh) -> int:
     """CPU-backend artifact quantifier: the CPU pipeline upconverts bf16
     dot operands (weights, KV caches) to f32 because it lacks bf16 dot
